@@ -1,0 +1,73 @@
+"""Shared benchmark helpers: datasets, timing, CSV rows.
+
+All benchmarks run on XLA:CPU at reduced scale (this container), with the
+same code paths the TPU target uses (kernels dispatch per
+repro.kernels.ops.get_backend()).  Construction time is wall-clock of the
+jitted build, recall measured with the unified search (paper Fig 5/6
+protocol: same search algorithm for every index).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grnnd, recall as R
+from repro.core.search import search
+from repro.data import synthetic
+
+K = 10
+EF = 48
+
+
+def bench_datasets(n: int = 6000, nq: int = 300):
+    """Reduced-scale stand-ins for SIFT1M/DEEP1M/GIST1M."""
+    out = {}
+    for name, preset in (("sift-like", "sift-like"),
+                         ("deep-like", "deep-like"),
+                         ("gist-like", "gist-like")):
+        nn = n if preset != "gist-like" else max(n // 2, 1000)
+        x = synthetic.make_preset(jax.random.PRNGKey(hash(name) % 2**31),
+                                  preset, nn)
+        q = synthetic.queries_from(jax.random.PRNGKey(7), x, nq)
+        gt = R.brute_force_knn(x, q, K)
+        out[name] = (x, q, gt)
+    return out
+
+
+def timed_build(x, cfg: grnnd.GRNNDConfig, key=None, repeats: int = 1):
+    """Compile-excluded wall time of the jitted GRNND build."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    pool = grnnd.build_graph(key, x, cfg)          # compile + warm
+    pool.ids.block_until_ready()
+    times = []
+    for i in range(repeats):
+        t0 = time.perf_counter()
+        pool = grnnd.build_graph(jax.random.fold_in(key, i), x, cfg)
+        pool.ids.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return pool, min(times)
+
+
+def eval_recall(x, graph_ids, q, gt, ef: int = EF):
+    res = search(x, graph_ids, q, k=K, ef=ef)
+    return R.recall_at_k(res.ids, gt)
+
+
+def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3):
+    res = search(x, graph_ids, q, k=K, ef=ef)      # compile + warm
+    res.ids.block_until_ready()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = search(x, graph_ids, q, k=K, ef=ef)
+        res.ids.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    qps = q.shape[0] / min(times)
+    return res, qps
+
+
+def row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,40 @@
+"""Fig 6 analogue: QPS vs recall of the constructed indices.
+
+Fixed construction settings per method; the search parameter (ef) sweeps the
+QPS-recall curve with the SAME unified search for every graph.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import grnnd, rnnd_ref
+
+
+def run(n: int = 4000) -> list[str]:
+    rows = []
+    for name, (x, q, gt) in C.bench_datasets(n=n).items():
+        cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                                pairs_per_vertex=24)
+        pool, _ = C.timed_build(x, cfg)
+
+        ids_seq = None
+        if x.shape[0] <= 3000:  # sequential baseline only at small n
+            adj = rnnd_ref.build_graph_ref(np.asarray(x), s=12, r=24,
+                                           t1=2, t2=2, seed=0)
+            ids_seq = jnp.asarray(rnnd_ref.adjacency_to_pool_arrays(adj, 24))
+
+        for ef in (16, 32, 64, 128):
+            res, qps = C.timed_search(x, pool.ids, q, ef=ef, repeats=2)
+            from repro.core.recall import recall_at_k
+            rec = recall_at_k(res.ids, gt)
+            rows.append(C.row(f"fig6/{name}/grnnd/ef{ef}", 1.0 / qps,
+                              f"recall={rec:.3f} qps={qps:.0f}"))
+            if ids_seq is not None:
+                res2, qps2 = C.timed_search(x, ids_seq, q, ef=ef, repeats=2)
+                rec2 = recall_at_k(res2.ids, gt)
+                rows.append(C.row(f"fig6/{name}/rnnd-cpu/ef{ef}", 1.0 / qps2,
+                                  f"recall={rec2:.3f} qps={qps2:.0f}"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig 7 analogue: candidate update strategy ablation —
+ascending vs descending vs disordered (the paper's core claim: disordered
+balances construction time and accuracy; ascending risks convergence traps;
+descending explores but costs more).
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import grnnd
+
+
+def run(n: int = 4000) -> list[str]:
+    rows = []
+    for name, (x, q, gt) in C.bench_datasets(n=n).items():
+        for order in ("ascending", "descending", "disordered"):
+            cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                                    pairs_per_vertex=24, order=order)
+            pool, t = C.timed_build(x, cfg)
+            rec = C.eval_recall(x, pool.ids, q, gt)
+            deg = float(pool.degree().mean())
+            rows.append(C.row(f"fig7/{name}/{order}", t,
+                              f"recall={rec:.3f} mean_degree={deg:.1f}"))
+    return rows

@@ -1,0 +1,22 @@
+"""Fig 8 analogue: reverse-edge sampling ratio (rho) sweep.
+
+The paper's claim: low rho is fast but loses connectivity/recall; high rho
+costs time with diminishing returns; rho ~= 0.6 is the sweet spot.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import grnnd
+
+
+def run(n: int = 4000) -> list[str]:
+    rows = []
+    for name, (x, q, gt) in C.bench_datasets(n=n).items():
+        for rho in (0.1, 0.3, 0.6, 0.8, 1.0):
+            cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=rho,
+                                    pairs_per_vertex=24)
+            pool, t = C.timed_build(x, cfg)
+            rec = C.eval_recall(x, pool.ids, q, gt)
+            rows.append(C.row(f"fig8/{name}/rho{rho}", t,
+                              f"recall={rec:.3f}"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig 9 analogue: outer (T1) x inner (T2) iteration sensitivity.
+
+Paper's claim: T2 gains are dimension-dependent (high-dim needs deeper
+refinement); T1 grows cost roughly linearly and matters most for high-dim.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import grnnd
+
+
+def run(n: int = 3000) -> list[str]:
+    rows = []
+    for name, (x, q, gt) in C.bench_datasets(n=n).items():
+        for t1 in (1, 2, 4):
+            for t2 in (1, 2, 4, 8):
+                cfg = grnnd.GRNNDConfig(s=12, r=24, t1=t1, t2=t2, rho=0.6,
+                                        pairs_per_vertex=24)
+                pool, t = C.timed_build(x, cfg)
+                rec = C.eval_recall(x, pool.ids, q, gt)
+                rows.append(C.row(f"fig9/{name}/t1={t1}/t2={t2}", t,
+                                  f"recall={rec:.3f}"))
+    return rows

@@ -1,0 +1,129 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the compiled dry-run artifacts in results/dryrun_final/.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+cost_analysis() / the HLO shapes come from the SPMD per-device program, so
+no further division by chip count is needed; scan-body undercounting is
+already corrected by the dry-run's k=1/k=2 unrolled probes (see dryrun.py).
+
+MODEL_FLOPS uses 6·N_active·T (train) or 2·N_active·T (inference) plus the
+attention-context term; the ratio MODEL_FLOPS / HLO_FLOPs measures how much
+compiled compute is useful (remat recompute and padding waste push it down;
+values > 1 would mean XLA found algebraic savings).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import get_arch, list_archs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_chips: int) -> float:
+    """Useful-math FLOPs per device (param matmuls + attention context)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        tokens = b * s
+        flops = 6.0 * n_active * tokens
+        # attention context: fwd 4·H·Dh·S_eff per token, x3 for bwd
+        flops += 3.0 * _attn_context_flops(cfg, s, tokens)
+    elif shape.kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * n_active * tokens
+        flops += _attn_context_flops(cfg, s, tokens)
+    else:  # decode: one token each
+        tokens = b
+        flops = 2.0 * n_active * tokens
+        flops += _attn_context_flops(cfg, s, tokens, decode=True)
+    return flops / n_chips
+
+
+def _attn_context_flops(cfg, s, tokens, decode=False) -> float:
+    """4·H·Dh·context per token per attention layer (qk^T + att·v)."""
+    if not cfg.n_heads:
+        return 0.0
+    h, dh = cfg.n_heads, cfg.head_dim
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "ssm":
+            continue
+        if kind == "local" and cfg.window:
+            ctx = min(cfg.window, s)
+        else:
+            ctx = s
+        if not decode:
+            ctx = ctx / 2.0  # causal average
+        total += 4.0 * h * dh * ctx * tokens
+    return total
+
+
+def analyze(results_dir: str = "results/dryrun_final", mesh: str = "single"):
+    rows = []
+    rdir = pathlib.Path(results_dir)
+    cells = [(a, s) for a in list_archs() for s in SHAPES]
+    cells += [("grnnd-ann", s) for s in ("build_1m_d128", "build_1m_d960")]
+    for arch, shape in cells:
+            f = rdir / f"{arch}__{shape}__{mesh}.json"
+            if not f.exists():
+                continue
+            d = json.loads(f.read_text())
+            if d["status"] != "ok":
+                rows.append({"arch": arch, "shape": shape,
+                             "status": d["status"],
+                             "reason": d.get("reason", "")})
+                continue
+            n_chips = 1
+            for v in d["mesh_shape"].values():
+                n_chips *= v
+            t_comp = d["cost"]["flops"] / PEAK_FLOPS_BF16
+            t_mem = d["cost"]["bytes_accessed"] / HBM_BW
+            t_coll = d["collectives"]["total_bytes"] / ICI_BW_PER_LINK
+            terms = {"compute": t_comp, "memory": t_mem,
+                     "collective": t_coll}
+            dominant = max(terms, key=terms.get)
+            mf = (model_flops_per_device(arch, shape, n_chips)
+                  if arch != "grnnd-ann" else 0.0)
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "t_compute_s": t_comp, "t_memory_s": t_mem,
+                "t_collective_s": t_coll, "dominant": dominant,
+                "model_flops_per_device": mf,
+                "useful_ratio": mf / max(d["cost"]["flops"], 1.0),
+                "bound_s": max(terms.values()),
+                "roofline_frac": (t_comp / max(terms.values())
+                                  if max(terms.values()) > 0 else 0.0),
+            })
+    return rows
+
+
+def run() -> list[str]:
+    out = []
+    for r in analyze():
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            out.append(f"{name},0.0,{r['status']}:{r.get('reason','')[:40]}")
+            continue
+        derived = (f"dom={r['dominant']}"
+                   f" comp={r['t_compute_s']*1e3:.2f}ms"
+                   f" mem={r['t_memory_s']*1e3:.2f}ms"
+                   f" coll={r['t_collective_s']*1e3:.2f}ms"
+                   f" useful={r['useful_ratio']:.2f}"
+                   f" frac={r['roofline_frac']:.3f}")
+        out.append(f"{name},{r['bound_s']*1e6:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

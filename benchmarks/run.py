@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figures 5-9 reproduce the paper's
+experiment families at reduced CPU scale; `roofline` reads the dry-run
+artifacts (run `python -m repro.launch.dryrun --all` first to refresh).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {ALL}")
+    args = ap.parse_args()
+    which = args.only or ALL
+
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        if name == "fig5":
+            from benchmarks import fig5_construction as m
+        elif name == "fig6":
+            from benchmarks import fig6_qps as m
+        elif name == "fig7":
+            from benchmarks import fig7_order as m
+        elif name == "fig8":
+            from benchmarks import fig8_rho as m
+        elif name == "fig9":
+            from benchmarks import fig9_iters as m
+        elif name == "roofline":
+            from benchmarks import roofline as m
+        else:
+            print(f"# unknown benchmark {name}", file=sys.stderr)
+            continue
+        try:
+            for row in m.run():
+                print(row, flush=True)
+        except Exception as e:  # keep the harness going
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

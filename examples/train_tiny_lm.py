@@ -1,0 +1,28 @@
+"""Train a reduced-config LM for a few hundred steps with checkpointing.
+
+Any of the 10 assigned architectures works:
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --arch mamba2-130m
+    PYTHONPATH=src python examples/train_tiny_lm.py --arch deepseek-moe-16b
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    state, hist = train(args.arch, steps=args.steps, batch=8, seq=128,
+                        lr=3e-3, ckpt_dir=args.ckpt_dir, save_every=50,
+                        log_every=20)
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f} at step {hist[0]['step']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""GRNND paper dataset configs — the paper's own benchmark shapes.
+
+SIFT1M / DEEP1M / GIST1M (and reduced CPU-scale variants for this container).
+These drive the paper-reproduction benchmarks and the GRNND distributed
+dry-run config.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.grnnd import GRNNDConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ANNDatasetConfig:
+    name: str
+    n: int
+    d: int
+    n_queries: int
+    k: int = 10
+    build: GRNNDConfig = GRNNDConfig()
+
+
+# full-scale (TPU target; exercised via the dry-run)
+SIFT1M = ANNDatasetConfig(
+    "sift1m", n=1_000_000, d=128, n_queries=10_000,
+    build=GRNNDConfig(s=24, r=48, t1=4, t2=6, rho=0.6, pairs_per_vertex=48,
+                      chunk_size=4096))
+DEEP1M = ANNDatasetConfig(
+    "deep1m", n=1_000_000, d=96, n_queries=10_000,
+    build=GRNNDConfig(s=24, r=48, t1=3, t2=6, rho=0.6, pairs_per_vertex=48,
+                      chunk_size=4096))
+GIST1M = ANNDatasetConfig(
+    "gist1m", n=1_000_000, d=960, n_queries=1_000,
+    build=GRNNDConfig(s=24, r=48, t1=5, t2=6, rho=0.6, pairs_per_vertex=48,
+                      chunk_size=2048))
+
+# reduced-scale (CPU container benchmarks; same structure)
+SIFT_SMALL = ANNDatasetConfig(
+    "sift-small", n=20_000, d=128, n_queries=500,
+    build=GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6, pairs_per_vertex=24))
+DEEP_SMALL = ANNDatasetConfig(
+    "deep-small", n=20_000, d=96, n_queries=500,
+    build=GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6, pairs_per_vertex=24))
+GIST_SMALL = ANNDatasetConfig(
+    "gist-small", n=8_000, d=960, n_queries=200,
+    build=GRNNDConfig(s=12, r=24, t1=4, t2=4, rho=0.6, pairs_per_vertex=24))
+
+DATASETS = {c.name: c for c in
+            [SIFT1M, DEEP1M, GIST1M, SIFT_SMALL, DEEP_SMALL, GIST_SMALL]}

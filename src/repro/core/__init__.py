@@ -1,0 +1,17 @@
+"""GRNND core: the paper's contribution as a composable JAX library."""
+from repro.core.grnnd import (
+    GRNNDConfig, build_graph, build_graph_with_stats, update_round,
+    reverse_edge_round)
+from repro.core.pools import (
+    Pool, Requests, empty_pool, init_random, insert_requests, merge_into)
+from repro.core.search import SearchResult, search, medoid
+from repro.core.recall import brute_force_knn, recall_at_k
+from repro.core.distributed import sharded_build_graph, make_sharded_builder
+
+__all__ = [
+    "GRNNDConfig", "build_graph", "build_graph_with_stats", "update_round",
+    "reverse_edge_round", "Pool", "Requests", "empty_pool", "init_random",
+    "insert_requests", "merge_into", "SearchResult", "search", "medoid",
+    "brute_force_knn", "recall_at_k", "sharded_build_graph",
+    "make_sharded_builder",
+]

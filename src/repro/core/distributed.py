@@ -1,0 +1,226 @@
+"""Distributed GRNND build: vertex-sharded shard_map over the device mesh.
+
+The paper lists multi-GPU/distributed deployment as future work (§6); this
+module implements it for TPU pods.  Layout:
+
+  * vectors `x` are replicated (vector payloads are the gather-heavy side;
+    at N·D ≤ a few GiB replication is the right trade — a dim-sharded
+    variant with partial-distance all-reduce is sketched in DESIGN.md §4);
+  * pools are sharded over vertices along the (possibly multi-axis) data
+    dimension of the mesh;
+  * each shard generates redirect requests from its local vertices; requests
+    whose destination lives on another shard are exchanged — the exact
+    variant all-gathers the (dst, src, dist) triples (tiny vs vector data),
+    the optimized variant buckets them per destination shard and uses
+    all_to_all (see EXPERIMENTS.md §Perf);
+  * survivors never leave their shard (a vertex's own write buffer is local),
+    so only the redirect triples travel.
+
+Determinism: identical results for any shard count, because the merge stage
+is the same order-free topr_merge dataflow as the single-device build.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
+from jax import shard_map
+
+from repro.core import pools as P
+from repro.core.grnnd import (
+    GRNNDConfig, _pair_requests_chunk, _sorted_requests_chunk)
+from repro.kernels import ops
+
+
+def _local_round_requests(x, ids_loc, dists_loc, row0, key, cfg: GRNNDConfig):
+    """Request generation for a shard of vertices [row0, row0 + n_loc)."""
+    n_loc, r = ids_loc.shape
+    fn = (_pair_requests_chunk if cfg.order == "disordered"
+          else _sorted_requests_chunk)
+    rows_local = row0 + jnp.arange(n_loc, dtype=jnp.int32)
+    return fn(x, ids_loc, dists_loc, rows_local, key, cfg)
+
+
+def _filter_to_local(req: P.Requests, row0, n_loc) -> P.Requests:
+    """Re-base request destinations to local row indices; drop non-local."""
+    dst_local = req.dst - row0
+    ok = (req.dst >= 0) & (dst_local >= 0) & (dst_local < n_loc)
+    return P.Requests(
+        dst=jnp.where(ok, dst_local, -1),
+        src=req.src,
+        dist=req.dist,
+    )
+
+
+def make_sharded_builder(
+    mesh: Mesh,
+    axes: Sequence[str],
+    cfg: GRNNDConfig,
+    comm: str = "allgather",
+):
+    """Returns jit-able build_round(x, pool, key) with pools vertex-sharded.
+
+    `axes` are the mesh axis names carrying the vertex shard (e.g.
+    ("data",) or ("pod", "data")).  `comm` selects the redirect exchange:
+    "allgather" (exact) or "a2a" (bucketed all_to_all, bounded payload).
+    """
+    axes = tuple(axes)
+    vspec = PSpec(axes)          # vertex-sharded arrays
+    rspec = PSpec()              # replicated
+
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+
+    def shard_index():
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def round_body(x, ids_loc, dists_loc, key):
+        n_loc, r = ids_loc.shape
+        sidx = shard_index()
+        row0 = sidx * n_loc
+        key = jax.random.fold_in(key, sidx)
+
+        redirect, killed = _local_round_requests(
+            x, ids_loc, dists_loc, row0, key, cfg)
+
+        if comm == "allgather":
+            red_all = P.Requests(
+                dst=jax.lax.all_gather(redirect.dst, axes, tiled=True),
+                src=jax.lax.all_gather(redirect.src, axes, tiled=True),
+                dist=jax.lax.all_gather(redirect.dist, axes, tiled=True),
+            )
+        else:  # bucketed all_to_all: fixed cap per (src shard, dst shard)
+            # expected redirects/bucket ≈ n_loc · pairs / n_shards; 2x slack.
+            cap = max(2 * n_loc * cfg.pairs_per_vertex // max(n_shards, 1), r)
+            dst_shard = jnp.where(
+                redirect.dst >= 0, redirect.dst // n_loc, n_shards)
+            buckets_i = jnp.full((n_shards, cap), -1, jnp.int32)
+            buckets_s = jnp.full((n_shards, cap), -1, jnp.int32)
+            buckets_d = jnp.full((n_shards, cap), jnp.inf, jnp.float32)
+            order = jnp.argsort(dst_shard, stable=True)
+            ds = dst_shard[order]
+            idx = jnp.arange(ds.shape[0], dtype=jnp.int32)
+            is_start = jnp.concatenate([jnp.array([True]), ds[1:] != ds[:-1]])
+            seg0 = jax.lax.associative_scan(
+                jnp.maximum, jnp.where(is_start, idx, 0))
+            rank = idx - seg0
+            okk = (rank < cap) & (ds < n_shards)
+            row = jnp.where(okk, ds, n_shards)
+            buckets_i = buckets_i.at[row, rank].set(
+                redirect.dst[order], mode="drop")
+            buckets_s = buckets_s.at[row, rank].set(
+                redirect.src[order], mode="drop")
+            buckets_d = buckets_d.at[row, rank].set(
+                redirect.dist[order], mode="drop")
+            a2a = functools.partial(
+                jax.lax.all_to_all,
+                axis_name=axes if len(axes) > 1 else axes[0],
+                split_axis=0, concat_axis=0, tiled=True)
+            red_all = P.Requests(
+                dst=a2a(buckets_i).reshape(-1),
+                src=a2a(buckets_s).reshape(-1),
+                dist=a2a(buckets_d).reshape(-1),
+            )
+
+        # survivors stay aligned in their shard (perf iteration g1):
+        # only redirects go through the grouped-request path
+        surv_ids = jnp.where(killed, -1, ids_loc)
+        surv_dists = jnp.where(killed, jnp.inf, dists_loc)
+        local_red = _filter_to_local(red_all, row0, n_loc)
+        staged_i, staged_d = P.group_requests(local_red, n_loc, cfg.cap)
+        ids2 = jnp.concatenate([surv_ids, staged_i], axis=-1)
+        d2 = jnp.concatenate([surv_dists, staged_d], axis=-1)
+        return ops.topr_merge(ids2, d2, r)
+
+    sharded = shard_map(
+        round_body, mesh=mesh,
+        in_specs=(rspec, vspec, vspec, rspec),
+        out_specs=(vspec, vspec),
+        check_vma=False,
+    )
+
+    def build_round(x, pool: P.Pool, key) -> P.Pool:
+        ids, dists = sharded(x, pool.ids, pool.dists, key)
+        return P.Pool(ids, dists)
+
+    return build_round
+
+
+def sharded_build_graph(
+    mesh: Mesh,
+    axes: Sequence[str],
+    key: jax.Array,
+    x: jnp.ndarray,
+    cfg: GRNNDConfig,
+    comm: str = "allgather",
+) -> P.Pool:
+    """Full distributed build: init (replicated math, sharded layout) + rounds."""
+    n = x.shape[0]
+    vshard = NamedSharding(mesh, PSpec(tuple(axes)))
+    rshard = NamedSharding(mesh, PSpec())
+
+    x = jax.device_put(x, rshard)
+    k_init, k_rounds = jax.random.split(key)
+    pool = P.init_random(k_init, x, cfg.s, cfg.r)
+    pool = P.Pool(jax.device_put(pool.ids, vshard),
+                  jax.device_put(pool.dists, vshard))
+
+    round_fn = jax.jit(make_sharded_builder(mesh, axes, cfg, comm=comm))
+    rev_fn = jax.jit(functools.partial(_sharded_reverse, mesh, tuple(axes), cfg))
+
+    for t1 in range(cfg.t1):
+        for t2 in range(cfg.t2):
+            k = jax.random.fold_in(jax.random.fold_in(k_rounds, t1), t2)
+            pool = round_fn(x, pool, k)
+        if t1 != cfg.t1 - 1:
+            pool = rev_fn(pool)
+    return pool
+
+
+def _sharded_reverse(mesh, axes, cfg: GRNNDConfig, pool: P.Pool) -> P.Pool:
+    """Reverse-edge sampling with cross-shard routing (all-gather exchange)."""
+    vspec = PSpec(axes)
+    rspec = PSpec()
+
+    def body(ids_loc, dists_loc):
+        n_loc, r = ids_loc.shape
+        sidx = jnp.int32(0)
+        for a in axes:
+            sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+        row0 = sidx * n_loc
+
+        rows = row0 + jnp.broadcast_to(
+            jnp.arange(n_loc, dtype=jnp.int32)[:, None], (n_loc, r))
+        deg = jnp.sum(ids_loc >= 0, axis=-1)[:, None]
+        take = jnp.ceil(cfg.rho * deg).astype(jnp.int32)
+        slot = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32)[None], (n_loc, r))
+        sel = (slot < take) & (ids_loc >= 0)
+
+        req = P.Requests(
+            dst=jnp.where(sel, ids_loc, -1).reshape(-1),
+            src=rows.reshape(-1),
+            dist=dists_loc.reshape(-1),
+        )
+        req_all = P.Requests(
+            dst=jax.lax.all_gather(req.dst, axes, tiled=True),
+            src=jax.lax.all_gather(req.src, axes, tiled=True),
+            dist=jax.lax.all_gather(req.dist, axes, tiled=True),
+        )
+        local = _filter_to_local(req_all, row0, n_loc)
+        staged_i, staged_d = P.group_requests(local, n_loc, cfg.cap)
+        ids2 = jnp.concatenate([ids_loc, staged_i], axis=-1)
+        d2 = jnp.concatenate([dists_loc, staged_d], axis=-1)
+        return ops.topr_merge(ids2, d2, r)
+
+    ids, dists = shard_map(
+        body, mesh=mesh, in_specs=(vspec, vspec), out_specs=(vspec, vspec),
+        check_vma=False,
+    )(pool.ids, pool.dists)
+    return P.Pool(ids, dists)

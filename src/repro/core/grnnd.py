@@ -1,0 +1,295 @@
+"""GRNND: GPU-parallel Relative NN-Descent, adapted to TPU/JAX.
+
+Implements paper Alg. 3/4 as a fully batched, functional pipeline:
+
+  * disordered neighbor propagation (§3.3): every vertex samples
+    `pairs_per_vertex` random slot pairs from its read buffer, applies the
+    RNG criterion d(n_i, n_j) < max(d(v, n_i), d(v, n_j)) and redirects the
+    farther endpoint into the closer endpoint's write buffer;
+  * ascending / descending sorted rounds (§4.3 ablation, Fig. 2b/7): the
+    faithful parallel port of the sequential UPDATE_NEIGHBORS (Alg. 2) —
+    candidates evaluated against already-accepted neighbors in sorted order;
+  * the double-buffered pool (§3.5): each round builds the write buffer from
+    scratch out of (redirect ∪ survivor) requests, then the buffers swap —
+    in functional form, the new Pool value replaces the old;
+  * reverse edge sampling (§3.6): between outer iterations, each vertex
+    requests insertion of itself into its top ρ·k neighbors' pools.
+
+Batched-vs-sequential semantics note (recorded in DESIGN.md): within one
+round all pair evaluations see the same read-buffer snapshot, so a slot
+killed by one pair is still visible to other pairs of the same round; kills
+are OR-combined at the end of the round.  The GPU version interleaves these
+within a warp; both are stochastic explorations of the same criterion and
+converge to graphs of equal recall (validated in tests/benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pools as P
+from repro.kernels import ops
+
+
+class GRNNDConfig(NamedTuple):
+    s: int = 16                    # initial random neighbors per vertex
+    r: int = 32                    # pool capacity (R)
+    t1: int = 3                    # outer iterations (T1)
+    t2: int = 4                    # inner rounds (T2)
+    rho: float = 0.6               # reverse-edge sampling ratio (ρ)
+    pairs_per_vertex: int = 32     # sampled candidate pairs per round
+    order: str = "disordered"      # "disordered" | "ascending" | "descending"
+    incoming_cap: int | None = None  # staged insertions per vertex per round
+    chunk_size: int | None = None    # vertex chunking for bounded memory
+
+    @property
+    def cap(self) -> int:
+        return self.incoming_cap if self.incoming_cap is not None else self.r
+
+
+# ---------------------------------------------------------------------------
+# Disordered propagation round (Alg. 4)
+# ---------------------------------------------------------------------------
+
+def _pair_requests_chunk(x, ids_c, dists_c, rows_c, key, cfg: GRNNDConfig):
+    """Evaluate random candidate pairs for a chunk of vertices.
+
+    Returns (redirect Requests, kill mask (C, R) bool).
+    """
+    c, r = ids_c.shape
+    p = cfg.pairs_per_vertex
+    ki, kj = jax.random.split(key)
+    si = jax.random.randint(ki, (c, p), 0, r, jnp.int32)
+    sj = jax.random.randint(kj, (c, p), 0, r, jnp.int32)
+
+    ni = jnp.take_along_axis(ids_c, si, axis=1)
+    nj = jnp.take_along_axis(ids_c, sj, axis=1)
+    dvi = jnp.take_along_axis(dists_c, si, axis=1)
+    dvj = jnp.take_along_axis(dists_c, sj, axis=1)
+    valid = (ni >= 0) & (nj >= 0) & (ni != nj)
+
+    xi = x[jnp.clip(ni, 0).reshape(-1)]
+    xj = x[jnp.clip(nj, 0).reshape(-1)]
+    dij = ops.rowwise_sqdist(xi, xj).reshape(c, p)
+
+    # RNG criterion (paper eq. 2)
+    hit = valid & (dij < jnp.maximum(dvi, dvj))
+
+    i_is_far = dvi > dvj
+    far = jnp.where(i_is_far, ni, nj)
+    close = jnp.where(i_is_far, nj, ni)
+    far_slot = jnp.where(i_is_far, si, sj)
+
+    redirect = P.Requests(
+        dst=jnp.where(hit, close, -1).reshape(-1),
+        src=far.reshape(-1),
+        dist=dij.reshape(-1),
+    )
+
+    killed = jnp.zeros((c, r), jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[:, None], (c, p))
+    killed = killed.at[rows, far_slot].max(hit.astype(jnp.int32))
+    return redirect, killed.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Sorted round (faithful parallel Alg. 2 — the ascending/descending ablation)
+# ---------------------------------------------------------------------------
+
+def _sorted_requests_chunk(x, ids_c, dists_c, rows_c, key, cfg: GRNNDConfig):
+    """Alg. 2 applied per vertex on a snapshot, vectorized over the chunk.
+
+    Candidates are processed in ascending (or descending) distance order;
+    each is compared against all previously *accepted* neighbors; a conflict
+    (d(n, n') <= d(v, n)) rejects the candidate and redirects it to the first
+    accepted conflictor.  Returns (redirect Requests, kill mask (C, R)).
+    """
+    del key
+    c, r = ids_c.shape
+    sign = 1.0 if cfg.order == "ascending" else -1.0
+    order = jnp.argsort(jnp.where(ids_c >= 0, sign * dists_c, jnp.inf), axis=-1)
+    ids_o = jnp.take_along_axis(ids_c, order, axis=-1)
+    dv_o = jnp.take_along_axis(dists_c, order, axis=-1)
+    valid_o = ids_o >= 0
+
+    # pairwise distances among pool members, in sorted-slot space
+    vecs = x[jnp.clip(ids_o, 0).reshape(-1)].reshape(c, r, -1)
+    xx = jnp.sum(vecs * vecs, axis=-1)
+    g = xx[:, :, None] + xx[:, None, :] - 2.0 * jnp.einsum(
+        "crd,csd->crs", vecs, vecs, preferred_element_type=jnp.float32)
+    g = jnp.maximum(g, 0.0)
+
+    def step(accepted, i):
+        g_i = jax.lax.dynamic_index_in_dim(g, i, axis=1, keepdims=False)  # (C,R)
+        dv_i = jax.lax.dynamic_index_in_dim(dv_o, i, axis=1, keepdims=False)
+        ok_i = jax.lax.dynamic_index_in_dim(valid_o, i, axis=1, keepdims=False)
+        conflict = accepted & (g_i <= dv_i[:, None])                      # (C,R)
+        any_conflict = jnp.any(conflict, axis=-1)
+        accept_i = ok_i & ~any_conflict
+        accepted = accepted.at[:, i].set(accept_i)
+        # first accepted conflictor in processing order
+        slot_rank = jnp.where(conflict, jnp.arange(r, dtype=jnp.int32)[None, :], r)
+        j = jnp.min(slot_rank, axis=-1)                                   # (C,)
+        red_dst = jnp.where(
+            ok_i & any_conflict,
+            jnp.take_along_axis(ids_o, jnp.clip(j, 0, r - 1)[:, None], 1)[:, 0],
+            -1,
+        )
+        red_d = jnp.take_along_axis(
+            g_i, jnp.clip(j, 0, r - 1)[:, None], axis=1)[:, 0]
+        src_i = jnp.take_along_axis(ids_o, jnp.full((c, 1), i, jnp.int32), 1)[:, 0]
+        return accepted, (red_dst, src_i, red_d, accept_i)
+
+    accepted0 = jnp.zeros((c, r), bool)
+    accepted, (red_dst, red_src, red_d, accept_seq) = jax.lax.scan(
+        step, accepted0, jnp.arange(r, dtype=jnp.int32))
+
+    redirect = P.Requests(
+        dst=red_dst.T.reshape(-1),   # scan stacks on axis 0 -> (R, C)
+        src=red_src.T.reshape(-1),
+        dist=red_d.T.reshape(-1),
+    )
+    # kill = evaluated-and-rejected slots, mapped back to original slot space
+    accepted_orig = jnp.zeros((c, r), bool)
+    accepted_orig = accepted_orig.at[
+        jnp.broadcast_to(jnp.arange(c)[:, None], (c, r)), order
+    ].set(accepted)
+    killed = (ids_c >= 0) & ~accepted_orig
+    return redirect, killed
+
+
+# ---------------------------------------------------------------------------
+# One inner round: requests -> fresh write buffer -> swap
+# ---------------------------------------------------------------------------
+
+def _round_requests(x, pool: P.Pool, key, cfg: GRNNDConfig):
+    """Returns (redirect Requests, killed (N, R) mask)."""
+    n, r = pool.ids.shape
+    fn = _pair_requests_chunk if cfg.order == "disordered" else _sorted_requests_chunk
+
+    chunk = cfg.chunk_size
+    if chunk is None or n % chunk != 0 or chunk >= n:
+        rows = jnp.arange(n, dtype=jnp.int32)
+        redirect, killed = fn(x, pool.ids, pool.dists, rows, key, cfg)
+    else:
+        n_chunks = n // chunk
+        keys = jax.random.split(key, n_chunks)
+        ids_ch = pool.ids.reshape(n_chunks, chunk, r)
+        dists_ch = pool.dists.reshape(n_chunks, chunk, r)
+        rows_ch = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
+
+        def body(args):
+            ids_c, dists_c, rows_c, k = args
+            red, kill = fn(x, ids_c, dists_c, rows_c, k, cfg)
+            return red, kill
+
+        red, killed = jax.lax.map(body, (ids_ch, dists_ch, rows_ch, keys))
+        redirect = P.Requests(
+            dst=red.dst.reshape(-1), src=red.src.reshape(-1),
+            dist=red.dist.reshape(-1))
+        killed = killed.reshape(n, r)
+    return redirect, killed
+
+
+def update_round(x, pool: P.Pool, key, cfg: GRNNDConfig) -> P.Pool:
+    """One UPDATE_NEIGHBORS_PARALLEL round incl. buffer swap (Alg. 4).
+
+    Perf iteration g1 (EXPERIMENTS.md §Perf): survivors (Alg. 4 lines
+    11-15) are already per-vertex aligned, so they bypass the request
+    sort/scatter entirely — only cross-vertex redirects are grouped.  The
+    merged result is the identical top-R of the same union.
+    """
+    n, r = pool.ids.shape
+    redirect, killed = _round_requests(x, pool, key, cfg)
+    surv_ids = jnp.where(killed, -1, pool.ids)
+    surv_dists = jnp.where(killed, jnp.inf, pool.dists)
+    staged_i, staged_d = P.group_requests(redirect, n, cfg.cap)
+    return P.merge_into(P.Pool(surv_ids, surv_dists), staged_i, staged_d)
+
+
+# ---------------------------------------------------------------------------
+# Reverse edge sampling (§3.6)
+# ---------------------------------------------------------------------------
+
+def reverse_edge_round(pool: P.Pool, cfg: GRNNDConfig, rho=None) -> P.Pool:
+    """Insert v into the pools of its top ρ·k neighbors (k = live degree).
+
+    Pools are distance-sorted (topr_merge invariant), so "top ρ·k" is a
+    per-row prefix of ceil(ρ · degree) slots.
+    """
+    rho = cfg.rho if rho is None else rho
+    n, r = pool.ids.shape
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, r))
+    deg = pool.degree()[:, None]                                  # (N, 1)
+    take = jnp.ceil(rho * deg).astype(jnp.int32)
+    slot = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32)[None, :], (n, r))
+    sel = (slot < take) & (pool.ids >= 0)
+
+    req = P.Requests(
+        dst=jnp.where(sel, pool.ids, -1).reshape(-1),  # insert INTO neighbor
+        src=rows.reshape(-1),                          # ... the owner vertex
+        dist=pool.dists.reshape(-1),                   # d symmetric
+    )
+    return P.insert_requests(pool, req, cap=cfg.cap)
+
+
+# ---------------------------------------------------------------------------
+# Full build (Alg. 3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _build_graph_impl(key: jax.Array, x: jnp.ndarray, cfg: GRNNDConfig,
+                      t1, t2, rho) -> P.Pool:
+    """t1/t2/rho are traced: hyperparameter sweeps share one compilation."""
+    k_init, k_rounds = jax.random.split(key)
+    pool = P.init_random(k_init, x, cfg.s, cfg.r)
+
+    def outer(t1_i, pool):
+        def inner(t2_i, carry):
+            pool = carry
+            k = jax.random.fold_in(jax.random.fold_in(k_rounds, t1_i), t2_i)
+            return update_round(x, pool, k, cfg)
+
+        pool = jax.lax.fori_loop(0, t2, inner, pool)
+        pool = jax.lax.cond(
+            t1_i != t1 - 1,
+            lambda p: reverse_edge_round(p, cfg, rho=rho),
+            lambda p: p,
+            pool,
+        )
+        return pool
+
+    return jax.lax.fori_loop(0, t1, outer, pool)
+
+
+def build_graph(key: jax.Array, x: jnp.ndarray, cfg: GRNNDConfig) -> P.Pool:
+    """Construct the ANN graph: init -> T1 x (T2 rounds + reverse sampling)."""
+    static_cfg = cfg._replace(t1=-1, t2=-1, rho=-1.0)  # normalize jit key
+    return _build_graph_impl(key, x, static_cfg,
+                             jnp.int32(cfg.t1), jnp.int32(cfg.t2),
+                             jnp.float32(cfg.rho))
+
+
+def build_graph_with_stats(key, x, cfg: GRNNDConfig):
+    """Un-jitted build that also returns per-round degree/change diagnostics."""
+    n = x.shape[0]
+    k_init, k_rounds = jax.random.split(key)
+    pool = P.init_random(k_init, x, cfg.s, cfg.r)
+    stats = []
+    for t1 in range(cfg.t1):
+        for t2 in range(cfg.t2):
+            k = jax.random.fold_in(jax.random.fold_in(k_rounds, t1), t2)
+            new_pool = update_round(x, pool, k, cfg)
+            changed = jnp.mean((new_pool.ids != pool.ids).astype(jnp.float32))
+            stats.append({
+                "t1": t1, "t2": t2,
+                "mean_degree": float(jnp.mean(new_pool.degree())),
+                "frac_changed": float(changed),
+            })
+            pool = new_pool
+        if t1 != cfg.t1 - 1:
+            pool = reverse_edge_round(pool, cfg)
+    return pool, stats

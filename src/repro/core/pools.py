@@ -1,0 +1,172 @@
+"""Fixed-capacity, double-buffered neighbor pools (GRNND §3.5) — functional.
+
+A pool is a pair of arrays over all N vertices:
+
+    pool_ids   (N, R) int32    — neighbor vertex ids, -1 marks an empty slot
+    pool_dists (N, R) float32  — squared L2 distance to the owning vertex,
+                                 +inf marks an empty slot
+
+The GPU version holds two static R-slot buffers per vertex and swaps
+pointers; here the double buffer is value semantics (the update produces new
+arrays) and the "clear" is re-initialization to sentinels.  The GPU's atomic
+WARP_INSERT becomes a deterministic two-stage dataflow:
+
+  1. group_requests: all (dst, src, dist) insertion requests of a round are
+     lex-sorted (dst-major, dist-minor), capacity-capped per destination
+     segment, and scattered into a per-vertex staging buffer — this replaces
+     inter-warp atomics with one sort + one scatter;
+  2. topr_merge: per vertex, pool ∪ staging is deduped and the R closest
+     survive — this replaces ballot dedup + replace-farthest-if-closer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class Pool(NamedTuple):
+    ids: jnp.ndarray    # (N, R) int32
+    dists: jnp.ndarray  # (N, R) float32
+
+    @property
+    def n(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def r(self) -> int:
+        return self.ids.shape[1]
+
+    def degree(self) -> jnp.ndarray:
+        return jnp.sum(self.ids >= 0, axis=-1)
+
+
+def empty_pool(n: int, r: int) -> Pool:
+    return Pool(
+        ids=jnp.full((n, r), -1, jnp.int32),
+        dists=jnp.full((n, r), jnp.inf, jnp.float32),
+    )
+
+
+def init_random(key: jax.Array, x: jnp.ndarray, s: int, r: int) -> Pool:
+    """Random S-NN initialization (paper Alg. 3 lines 3-5).
+
+    Each vertex receives S distinct-ish random neighbors (self-edges are
+    rerolled by offset), with true distances, placed in an R-capacity pool.
+    """
+    n, _ = x.shape
+    assert s <= r
+    raw = jax.random.randint(key, (n, s), 0, n - 1, jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    # map the range [0, n-1) onto [0, n) \ {v}: anything >= v shifts up by 1
+    ids = jnp.where(raw >= rows, raw + 1, raw)
+    dists = _owner_dists(x, rows[:, 0], ids)
+    ids = jnp.pad(ids, ((0, 0), (0, r - s)), constant_values=-1)
+    dists = jnp.pad(dists, ((0, 0), (0, r - s)), constant_values=jnp.inf)
+    # dedup (randint can repeat) + sort by distance
+    return Pool(*ops.topr_merge(ids, dists, r))
+
+
+def _owner_dists(x: jnp.ndarray, owners: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """d(x[owner], x[id]) for an (B, K) id matrix; invalid ids -> +inf."""
+    b, k = ids.shape
+    safe = jnp.clip(ids, 0)
+    xv = x[owners]                                  # (B, D)
+    nv = x[safe.reshape(-1)].reshape(b, k, -1)      # (B, K, D)
+    d = ops.rowwise_sqdist(
+        jnp.repeat(xv, k, axis=0).reshape(b * k, -1),
+        nv.reshape(b * k, -1),
+    ).reshape(b, k)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+class Requests(NamedTuple):
+    """A flat batch of insertion requests: put `src` into `dst`'s pool."""
+    dst: jnp.ndarray   # (M,) int32, -1 = inactive
+    src: jnp.ndarray   # (M,) int32
+    dist: jnp.ndarray  # (M,) float32  d(dst, src)
+
+
+def concat_requests(*reqs: Requests) -> Requests:
+    return Requests(
+        dst=jnp.concatenate([r.dst for r in reqs]),
+        src=jnp.concatenate([r.src for r in reqs]),
+        dist=jnp.concatenate([r.dist for r in reqs]),
+    )
+
+
+def group_requests(req: Requests, n: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage requests into per-destination buffers: -> ids/dists (N, cap).
+
+    Deterministic replacement for atomic concurrent insertion: requests are
+    ordered dist-minor / dst-major with two stable sorts, ranked within their
+    destination segment, and the first `cap` per destination scattered.
+    Self-inserts (dst == src) and inactive requests are dropped.
+    """
+    dst = jnp.where(req.dst == req.src, -1, req.dst)
+
+    # dedup identical (dst, src) requests so duplicates cannot crowd out
+    # distinct candidates at the capacity rank below: sort src-minor /
+    # dst-major, invalidate repeats.
+    o1 = jnp.argsort(req.src, stable=True)
+    o2 = jnp.argsort(jnp.where(dst >= 0, dst, n)[o1], stable=True)
+    dperm = o1[o2]
+    dst_p, src_p = dst[dperm], req.src[dperm]
+    dup = jnp.concatenate([
+        jnp.array([False]),
+        (dst_p[1:] == dst_p[:-1]) & (src_p[1:] == src_p[:-1]) & (dst_p[1:] >= 0),
+    ])
+    dst = dst.at[dperm].set(jnp.where(dup, -1, dst_p))
+
+    dist = jnp.where(dst >= 0, req.dist, jnp.inf)
+    dst_key = jnp.where(dst >= 0, dst, n)  # inactive sorts to the end
+
+    # stable composed sort: dist-minor then dst-major
+    order1 = jnp.argsort(dist, stable=True)
+    dst_s = dst_key[order1]
+    order2 = jnp.argsort(dst_s, stable=True)
+    perm = order1[order2]
+
+    dst_s = dst_key[perm]
+    src_s = req.src[perm]
+    dist_s = dist[perm]
+
+    m = dst_s.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.array([True]), dst_s[1:] != dst_s[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank = idx - seg_start
+
+    keep = (rank < cap) & (dst_s < n)
+    slot_dst = jnp.where(keep, dst_s, n)  # OOB rows dropped by mode="drop"
+    staged_ids = jnp.full((n, cap), -1, jnp.int32)
+    staged_dists = jnp.full((n, cap), jnp.inf, jnp.float32)
+    staged_ids = staged_ids.at[slot_dst, rank].set(src_s, mode="drop")
+    staged_dists = staged_dists.at[slot_dst, rank].set(dist_s, mode="drop")
+    return staged_ids, staged_dists
+
+
+def merge_into(pool: Pool, cand_ids: jnp.ndarray, cand_dists: jnp.ndarray) -> Pool:
+    """pool ∪ candidates -> R closest unique (the WARP_INSERT analogue)."""
+    ids = jnp.concatenate([pool.ids, cand_ids], axis=-1)
+    dists = jnp.concatenate([pool.dists, cand_dists], axis=-1)
+    return Pool(*ops.topr_merge(ids, dists, pool.r))
+
+
+def insert_requests(pool: Pool, req: Requests, cap: int | None = None) -> Pool:
+    """Group a request batch and merge it into the pool (both stages)."""
+    cap = cap if cap is not None else pool.r
+    staged_ids, staged_dists = group_requests(req, pool.n, cap)
+    return merge_into(pool, staged_ids, staged_dists)
+
+
+def build_requests_into_empty(
+    n: int, r: int, req: Requests, cap: int | None = None
+) -> Pool:
+    """Materialize a fresh pool (the cleared write buffer) from requests only."""
+    cap = cap if cap is not None else r
+    staged_ids, staged_dists = group_requests(req, n, max(cap, r))
+    return Pool(*ops.topr_merge(staged_ids, staged_dists, r))

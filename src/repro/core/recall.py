@@ -1,0 +1,31 @@
+"""Ground-truth kNN (brute force, chunked) and Recall@k evaluation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def brute_force_knn(
+    x: jnp.ndarray, queries: jnp.ndarray, k: int, chunk: int = 1024
+) -> jnp.ndarray:
+    """Exact k nearest dataset rows per query (squared L2), chunked over Q."""
+    outs = []
+    qn = queries.shape[0]
+    for lo in range(0, qn, chunk):
+        d = ops.pairwise_sqdist(queries[lo:lo + chunk], x)
+        idx = jax.lax.top_k(-d, k)[1]
+        outs.append(idx)
+    return jnp.concatenate(outs, axis=0).astype(jnp.int32)
+
+
+def recall_at_k(found_ids: jnp.ndarray, true_ids: jnp.ndarray) -> float:
+    """Fraction of true k-NN retrieved (order-insensitive). found (Q,k), true (Q,k)."""
+    f = np.asarray(found_ids)
+    t = np.asarray(true_ids)
+    hits = 0
+    for row_f, row_t in zip(f, t):
+        hits += len(set(row_f[row_f >= 0].tolist()) & set(row_t.tolist()))
+    return hits / t.size

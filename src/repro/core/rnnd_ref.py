@@ -1,0 +1,91 @@
+"""Sequential RNN-Descent (paper Alg. 1 + 2) — the CPU baseline / oracle.
+
+Faithful numpy port of Ono & Matsui's RNN-Descent as described in GRNND §2.2:
+vertices are processed one at a time with immediate writes, candidates are
+evaluated in ascending order against the already-accepted set, rejected
+candidates are redirected to the conflicting accepted neighbor, and full
+reverse edges are inserted between outer iterations.
+
+Deliberately unoptimized; used (a) as the CPU baseline in the Fig-5 analogue
+benchmark, and (b) as the quality oracle that the parallel GRNND build must
+match in recall at equal parameters.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _sqdist(a: np.ndarray, b: np.ndarray) -> float:
+    d = a - b
+    return float(d @ d)
+
+
+def build_graph_ref(
+    x: np.ndarray,
+    s: int = 16,
+    r: int = 32,
+    t1: int = 3,
+    t2: int = 4,
+    seed: int = 0,
+) -> list[list[int]]:
+    """Returns adjacency lists (each sorted ascending by distance, len <= r)."""
+    x = np.asarray(x, dtype=np.float32)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+
+    # --- INITIALIZATION: S random neighbors per vertex ---
+    pools: list[dict[int, float]] = []
+    for v in range(n):
+        cand = rng.choice(n - 1, size=min(s, n - 1), replace=False)
+        cand = np.where(cand >= v, cand + 1, cand)
+        pools.append({int(c): _sqdist(x[v], x[c]) for c in cand})
+
+    for outer in range(t1):
+        for _ in range(t2):
+            for v in range(n):
+                # Alg. 2: sort by distance, dedup (dict already unique), top R
+                items = sorted(pools[v].items(), key=lambda kv: kv[1])[:r]
+                accepted: list[tuple[int, float]] = []
+                for nid, dvn in items:
+                    valid = True
+                    for aid, _ in accepted:
+                        dnn = _sqdist(x[nid], x[aid])
+                        if dnn <= dvn:
+                            valid = False
+                            # redirect n -> N_{n'} (immediate write)
+                            pa = pools[aid]
+                            if nid != aid and nid not in pa:
+                                pa[nid] = dnn
+                                if len(pa) > 2 * r:  # soft cap like dynamic pool
+                                    worst = max(pa, key=pa.get)
+                                    del pa[worst]
+                            break
+                    if valid:
+                        accepted.append((nid, dvn))
+                pools[v] = dict(accepted)
+
+        if outer != t1 - 1:
+            # ADD_REVERSE_EDGES (full, the sequential algorithm's ρ = 1)
+            snapshot = [list(p.items()) for p in pools]
+            for v in range(n):
+                for nid, dvn in snapshot[v]:
+                    pn = pools[nid]
+                    if v != nid and v not in pn:
+                        pn[v] = dvn
+                        if len(pn) > 2 * r:
+                            worst = max(pn, key=pn.get)
+                            del pn[worst]
+
+    return [
+        [nid for nid, _ in sorted(p.items(), key=lambda kv: kv[1])[:r]]
+        for p in pools
+    ]
+
+
+def adjacency_to_pool_arrays(adj: list[list[int]], r: int):
+    """Convert ref adjacency lists to the (ids, dists-less) array layout."""
+    n = len(adj)
+    ids = np.full((n, r), -1, np.int32)
+    for v, lst in enumerate(adj):
+        ids[v, : len(lst[:r])] = lst[:r]
+    return ids

@@ -1,0 +1,107 @@
+"""Batched best-first graph search over a GRNND/RNN-Descent graph.
+
+Standard greedy beam search (the "fixed search algorithm" the paper uses to
+compare indices): a candidate list of size `ef` per query, expand the closest
+unexpanded candidate, push its unvisited neighbors, stop when every list
+entry is expanded.  Fully batched over queries with jax.lax.while_loop; the
+visited set is a dense (Q, N) bitmask (exact; a hashed variant would replace
+it at billion scale — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray     # (Q, k) int32
+    dists: jnp.ndarray   # (Q, k) float32
+    n_expanded: jnp.ndarray  # (Q,) int32 — distance computations proxy
+
+
+def medoid(x: jnp.ndarray) -> jnp.ndarray:
+    """Entry point: vertex nearest to the dataset centroid."""
+    c = jnp.mean(x, axis=0, keepdims=True)
+    return jnp.argmin(ops.pairwise_sqdist(c, x)[0]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps"))
+def search(
+    x: jnp.ndarray,
+    graph_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int = 10,
+    ef: int = 64,
+    max_steps: int = 512,
+    entry: jnp.ndarray | None = None,
+) -> SearchResult:
+    """Search the graph for the k nearest vertices to each query row."""
+    n, r = graph_ids.shape
+    q = queries.shape[0]
+    assert ef >= k
+    if entry is None:
+        entry = medoid(x)
+
+    qrows = jnp.arange(q, dtype=jnp.int32)
+
+    d_entry = ops.rowwise_sqdist(queries, jnp.broadcast_to(x[entry], queries.shape))
+    cand_ids = jnp.full((q, ef), -1, jnp.int32).at[:, 0].set(entry)
+    cand_dists = jnp.full((q, ef), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
+    expanded = jnp.zeros((q, ef), bool)
+    visited = jnp.zeros((q, n), bool).at[:, entry].set(True)
+    n_exp = jnp.zeros((q,), jnp.int32)
+
+    def cond(state):
+        cand_ids, cand_dists, expanded, visited, n_exp, steps = state
+        frontier = (cand_ids >= 0) & ~expanded
+        return (steps < max_steps) & jnp.any(frontier)
+
+    def body(state):
+        cand_ids, cand_dists, expanded, visited, n_exp, steps = state
+        frontier_d = jnp.where((cand_ids >= 0) & ~expanded, cand_dists, jnp.inf)
+        sel = jnp.argmin(frontier_d, axis=-1)                      # (Q,)
+        active = jnp.isfinite(jnp.min(frontier_d, axis=-1))        # (Q,)
+        sel_id = cand_ids[qrows, sel]
+        expanded = expanded.at[qrows, sel].set(True)
+
+        nbrs = graph_ids[jnp.clip(sel_id, 0)]                      # (Q, R)
+        nbrs = jnp.where(active[:, None] & (nbrs >= 0), nbrs, -1)
+        seen = visited[qrows[:, None], jnp.clip(nbrs, 0)]
+        fresh = (nbrs >= 0) & ~seen
+        visited = visited.at[qrows[:, None], jnp.clip(nbrs, 0)].max(fresh)
+
+        # distances query -> neighbor vectors
+        nv = x[jnp.clip(nbrs, 0).reshape(-1)].reshape(q, r, -1)
+        dq = ops.rowwise_sqdist(
+            jnp.repeat(queries, r, axis=0).reshape(q * r, -1),
+            nv.reshape(q * r, -1),
+        ).reshape(q, r)
+        dq = jnp.where(fresh, dq, jnp.inf)
+        n_exp = n_exp + jnp.sum(fresh, axis=-1, dtype=jnp.int32)
+
+        # merge: keep ef best of (candidate list + fresh neighbors);
+        # ids are unique by construction (visited filter), so plain
+        # sort-merge suffices — but reuse topr_merge for the dedup guarantee.
+        all_ids = jnp.concatenate([cand_ids, jnp.where(fresh, nbrs, -1)], axis=-1)
+        all_d = jnp.concatenate([cand_dists, dq], axis=-1)
+        all_exp = jnp.concatenate([expanded, jnp.zeros((q, r), bool)], axis=-1)
+        order = jnp.argsort(jnp.where(all_ids >= 0, all_d, jnp.inf), axis=-1)
+        all_ids = jnp.take_along_axis(all_ids, order, axis=-1)
+        all_d = jnp.take_along_axis(all_d, order, axis=-1)
+        all_exp = jnp.take_along_axis(all_exp, order, axis=-1)
+        cand_ids = all_ids[:, :ef]
+        cand_dists = all_d[:, :ef]
+        expanded = all_exp[:, :ef] | (cand_ids < 0)
+
+        return cand_ids, cand_dists, expanded, visited, n_exp, steps + 1
+
+    state = (cand_ids, cand_dists, expanded, visited, n_exp, jnp.int32(0))
+    cand_ids, cand_dists, expanded, visited, n_exp, _ = jax.lax.while_loop(
+        cond, body, state)
+    return SearchResult(cand_ids[:, :k], cand_dists[:, :k], n_exp)

@@ -1,0 +1,62 @@
+"""Synthetic datasets: vector corpora (ANN benchmarks) + LM token streams.
+
+Vector datasets model the paper's benchmark families at reduced scale:
+  * "sift-like"  — clustered, moderate dimension (SIFT1M: D=128)
+  * "deep-like"  — unit-norm embeddings (DEEP1M: D=96)
+  * "gist-like"  — high dimension (GIST1M: D=960)
+
+Clustered Gaussian mixtures reproduce the local-neighborhood structure that
+makes graph ANN interesting (uniform data has no cluster structure and makes
+every method look alike).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vector_dataset(
+    key: jax.Array,
+    n: int,
+    d: int,
+    n_clusters: int = 64,
+    cluster_std: float = 0.15,
+    normalize: bool = False,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Clustered Gaussian mixture, roughly unit-scale coordinates."""
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_clusters, d), jnp.float32)
+    assign = jax.random.randint(ka, (n,), 0, n_clusters)
+    pts = centers[assign] + cluster_std * jax.random.normal(kn, (n, d), jnp.float32)
+    if normalize:
+        pts = pts / jnp.linalg.norm(pts, axis=-1, keepdims=True)
+    return pts.astype(dtype)
+
+
+def queries_from(key: jax.Array, x: jnp.ndarray, q: int, noise: float = 0.05):
+    """Queries near dataset points (the realistic ANN query regime)."""
+    ki, kn = jax.random.split(key)
+    idx = jax.random.randint(ki, (q,), 0, x.shape[0])
+    return x[idx] + noise * jax.random.normal(kn, (q, x.shape[1]), x.dtype)
+
+
+DATASET_PRESETS = {
+    # name: (d, n_clusters, normalize)  — reduced-scale stand-ins
+    "sift-like": (128, 128, False),
+    "deep-like": (96, 128, True),
+    "gist-like": (960, 64, False),
+    "tiny": (16, 16, False),
+}
+
+
+def make_preset(key: jax.Array, name: str, n: int) -> jnp.ndarray:
+    d, ncl, norm = DATASET_PRESETS[name]
+    return vector_dataset(key, n, d, n_clusters=ncl, normalize=norm)
+
+
+def token_stream(key: jax.Array, batch: int, seq: int, vocab: int) -> jnp.ndarray:
+    """Zipf-ish synthetic token ids for LM training."""
+    u = jax.random.uniform(key, (batch, seq), jnp.float32, 1e-6, 1.0)
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(vocab)))) - 1.0
+    return jnp.clip(ranks, 0, vocab - 1).astype(jnp.int32)

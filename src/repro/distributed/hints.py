@@ -1,0 +1,40 @@
+"""Mesh hints: lets mesh-agnostic model code opt into explicit sharding.
+
+Model blocks (MoE EP, sequence parallelism) check `get_hints()` at trace
+time; when the launcher wraps the step function in `use_hints(mesh)`, they
+emit shard_map / with_sharding_constraint versions, otherwise they stay
+pure data-parallel-agnostic jnp (the path unit tests exercise).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import NamedTuple
+
+from jax.sharding import Mesh
+
+
+class MeshHints(NamedTuple):
+    mesh: Mesh
+    data_axes: tuple[str, ...]
+    model_axis: str | None
+    fsdp: bool = False
+
+
+_HINTS: contextvars.ContextVar[MeshHints | None] = contextvars.ContextVar(
+    "repro_mesh_hints", default=None)
+
+
+def get_hints() -> MeshHints | None:
+    return _HINTS.get()
+
+
+@contextlib.contextmanager
+def use_hints(mesh: Mesh, fsdp: bool = False):
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_axis = "model" if "model" in mesh.shape else None
+    token = _HINTS.set(MeshHints(mesh, data_axes, model_axis, fsdp))
+    try:
+        yield
+    finally:
+        _HINTS.reset(token)

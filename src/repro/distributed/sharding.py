@@ -1,0 +1,213 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for the production
+mesh, with divisibility-aware fallbacks.
+
+Policy (DP over pod+data, TP/EP over model):
+  * params replicate over (pod, data); their widest TP-able dim shards over
+    "model" — attention heads, MLP hidden, experts, vocab; norms replicate.
+  * stacked scan parameters carry a leading n_repeats axis that never shards.
+  * batch shards over (pod, data) on the batch dim.
+  * KV caches shard batch -> data axes, then kv-heads -> model when
+    divisible, else the sequence dim -> model (the long-context/small-kv
+    regime, e.g. gemma3-1b's single KV head or global_batch=1 decoding).
+
+Every rule is a *request*: `_ok` guards divisibility, so any arch lowers on
+any mesh, degrading to replication instead of erroring.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
+
+from repro.configs.base import ArchConfig
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        out = 1
+        for a in ax:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[ax]
+
+
+def _ok(dim: int, mesh: Mesh, ax) -> bool:
+    s = _axsize(mesh, ax)
+    return s > 1 and dim % s == 0 and dim >= s
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                stacked: bool) -> PSpec:
+    """Pick the TP spec for one parameter leaf by name + shape."""
+    dims: list = [None] * len(shape)
+    off = 1 if stacked else 0  # leading scan-stack axis never shards
+
+    def try_shard(rel_axis: int) -> bool:
+        i = off + rel_axis
+        if i < len(shape) and _ok(shape[i], mesh, "model"):
+            dims[i] = "model"
+            return True
+        return False
+
+    name = path.split("/")[-1]
+    if name in ("wq",):                 # (D, H, Dh)
+        _ = try_shard(1) or try_shard(2) or try_shard(0)
+    elif name in ("wk", "wv"):          # (D, K, Dh)
+        _ = try_shard(1) or try_shard(2) or try_shard(0)
+    elif name == "wo" and "attn" in path:   # (H, Dh, D)
+        _ = try_shard(0) or try_shard(2)
+    elif name in ("wi_gate", "wi_up"):  # (D, F) or (E, D, de)
+        _ = try_shard(len(shape) - off - 1) if len(shape) - off == 2 \
+            else try_shard(0)
+        if dims.count("model") == 0 and len(shape) - off == 3:
+            _ = try_shard(2)
+    elif name == "wo":                  # mlp (F, D) / moe (E, de, d)
+        _ = try_shard(0)
+    elif name == "router":              # (D, E)
+        _ = try_shard(1)
+    elif name in ("embed", "lm_head", "codebook_embed", "codebook_head"):
+        # shard the vocab dim
+        vdim = {"embed": 0, "lm_head": 1,
+                "codebook_embed": 1, "codebook_head": 2}[name]
+        _ = try_shard(vdim)
+    elif name == "in_proj":             # ssm (D, P)
+        _ = try_shard(1) or try_shard(0)
+    elif name == "out_proj":            # ssm (di, D)
+        _ = try_shard(0) or try_shard(1)
+    elif name in ("w1", "w2"):          # vision projector
+        _ = try_shard(1)
+    # everything else (norms, conv, scalars) replicates
+    return PSpec(*dims)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _extend_fsdp(spec: PSpec, shape, mesh: Mesh, stacked: bool) -> PSpec:
+    """ZeRO/FSDP: additionally shard the largest free dim over the data
+    axes.  pjit materializes full values at use sites (per-layer-group
+    all-gather under the scan), keeping resident state 1/|data| as large —
+    required for fp32-Adam 27B/235B models on 16 GiB HBM (EXPERIMENTS §Perf
+    iteration A5).
+    """
+    daxes = data_axes(mesh)
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, d in enumerate(dims):
+        if d is not None or (stacked and i == 0):
+            continue
+        if _ok(shape[i], mesh, daxes) and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    if best is not None:
+        dims[best] = daxes
+    return PSpec(*dims)
+
+
+def param_shardings(mesh: Mesh, params_shape: Any, tp: bool = True,
+                    fsdp: bool = False) -> Any:
+    """NamedSharding pytree for a params (or ShapeDtypeStruct) pytree.
+
+    tp=False replicates every parameter (the dp_only policy for models too
+    small to amortize tensor parallelism); fsdp=True additionally shards
+    over the data axes (models too big for TP-only residency).
+    """
+    def rule(path, leaf):
+        if not tp:
+            return NamedSharding(mesh, PSpec())
+        ps = _path_str(path)
+        stacked = "segments" in ps
+        spec = _param_spec(ps, leaf.shape, mesh, stacked)
+        if fsdp:
+            spec = _extend_fsdp(spec, leaf.shape, mesh, stacked)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_shardings(mesh: Mesh, state_shape: Any, tp: bool = True,
+                        fsdp: bool = False) -> Any:
+    """Optimizer state: step replicates; mu/nu mirror the param rules."""
+    def rule(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or "step" in ps or not tp:
+            return NamedSharding(mesh, PSpec())
+        stacked = "segments" in ps
+        spec = _param_spec(ps, leaf.shape, mesh, stacked)
+        if fsdp:
+            spec = _extend_fsdp(spec, leaf.shape, mesh, stacked)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(rule, state_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any,
+                    batch_axes: tuple[str, ...] | None = None) -> Any:
+    """Token/patch batches: shard dim 0 (batch) over (pod, data) — or over
+    `batch_axes` (e.g. including "model" under the dp_only policy)."""
+    daxes = batch_axes if batch_axes is not None else data_axes(mesh)
+
+    def rule(_, leaf):
+        if leaf.ndim >= 1 and _ok(leaf.shape[0], mesh, daxes):
+            return NamedSharding(mesh, PSpec(daxes))
+        # fall back to single-axis data sharding
+        if leaf.ndim >= 1 and _ok(leaf.shape[0], mesh, "data"):
+            return NamedSharding(mesh, PSpec("data"))
+        return NamedSharding(mesh, PSpec())
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    """KV / SSM caches (leading n_rep axis, then batch)."""
+    daxes = data_axes(mesh)
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        dims: list = [None] * leaf.ndim
+        # leaf layouts: kv (n_rep, B, S, K, Dh); ssm h (n_rep, B, nh, hd, st);
+        # conv (n_rep, B, W, C)
+        if leaf.ndim >= 2:
+            if _ok(leaf.shape[1], mesh, daxes):
+                dims[1] = daxes
+            elif _ok(leaf.shape[1], mesh, "data"):
+                dims[1] = "data"
+        last = ps.split("/")[-1]
+        if last in ("k", "v") and leaf.ndim == 5:
+            if _ok(leaf.shape[3], mesh, "model"):
+                dims[3] = "model"        # kv heads
+            elif _ok(leaf.shape[2], mesh, "model"):
+                dims[2] = "model"        # sequence (small-kv / long-context)
+        elif last == "h" and leaf.ndim == 5:
+            if _ok(leaf.shape[2], mesh, "model"):
+                dims[2] = "model"        # ssm heads
+        elif last == "conv" and leaf.ndim == 4:
+            if _ok(leaf.shape[3], mesh, "model"):
+                dims[3] = "model"        # conv channels
+        return NamedSharding(mesh, PSpec(*dims))
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def logits_sharding(mesh: Mesh, batched: bool = True) -> NamedSharding:
+    daxes = data_axes(mesh)
+    return NamedSharding(mesh, PSpec(daxes if batched else None))
+
+
+def with_shardings(shapes: Any, shardings: Any) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct pytree (for .lower())."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

@@ -1,0 +1,57 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+Backend policy:
+  * "pallas"    — real pl.pallas_call lowering (TPU).
+  * "interpret" — pallas_call(interpret=True): executes the kernel body in
+                  Python; used by tests on this CPU container to validate the
+                  kernels against the ref.py oracles.
+  * "ref"       — pure-jnp oracle; the fast path on CPU (XLA:CPU) and the
+                  numerical ground truth.
+  * "auto"      — pallas on TPU, ref elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas, rowwise_sqdist_pallas
+from repro.kernels.topr_merge import topr_merge_pallas
+
+_BACKEND = "auto"
+
+
+def set_backend(backend: str) -> None:
+    global _BACKEND
+    assert backend in ("auto", "pallas", "interpret", "ref")
+    _BACKEND = backend
+
+
+def get_backend() -> str:
+    if _BACKEND != "auto":
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def pairwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(M,D) x (N,D) -> (M,N) squared L2, fp32."""
+    backend = get_backend()
+    if backend == "ref":
+        return _ref.pairwise_sqdist_ref(x, y)
+    return pairwise_sqdist_pallas(x, y, interpret=(backend == "interpret"))
+
+
+def rowwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(M,D) x (M,D) -> (M,) squared L2 of corresponding rows, fp32."""
+    backend = get_backend()
+    if backend == "ref":
+        return _ref.rowwise_sqdist_ref(x, y)
+    return rowwise_sqdist_pallas(x, y, interpret=(backend == "interpret"))
+
+
+def topr_merge(ids: jnp.ndarray, dists: jnp.ndarray, r: int):
+    """(B,W) candidate rows -> (B,r) closest unique entries. See ref.topr_merge_ref."""
+    backend = get_backend()
+    if backend == "ref":
+        return _ref.topr_merge_ref(ids, dists, r)
+    return topr_merge_pallas(ids, dists, r, interpret=(backend == "interpret"))

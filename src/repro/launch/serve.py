@@ -1,0 +1,53 @@
+"""Serve batched ANN queries against a saved GRNND index.
+
+    PYTHONPATH=src python -m repro.launch.serve --index /tmp/sift.idx.npz \
+        [--batches 8] [--ef 48]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import brute_force_knn, recall_at_k
+from repro.core.search import search
+from repro.data import synthetic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--index", required=True)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--ef", type=int, default=48)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    blob = np.load(args.index)
+    x = jnp.asarray(blob["x"])
+    ids = jnp.asarray(blob["ids"])
+
+    lat, recs = [], []
+    for b in range(args.batches + 1):
+        q = synthetic.queries_from(jax.random.PRNGKey(100 + b), x,
+                                   args.batch_size)
+        t0 = time.perf_counter()
+        res = search(x, ids, q, k=args.k, ef=args.ef)
+        res.ids.block_until_ready()
+        dt = time.perf_counter() - t0
+        if b == 0:
+            continue  # compile batch
+        lat.append(dt)
+        gt = brute_force_knn(x, q, args.k)
+        recs.append(recall_at_k(res.ids, gt))
+
+    qps = args.batch_size / (sum(lat) / len(lat))
+    print(f"qps={qps:.0f}  p50={sorted(lat)[len(lat)//2]*1e3:.1f}ms  "
+          f"recall@{args.k}={sum(recs)/len(recs):.3f}")
+
+
+if __name__ == "__main__":
+    main()

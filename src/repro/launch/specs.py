@@ -1,0 +1,257 @@
+"""Abstract input specs + step functions for the multi-pod dry-run.
+
+Everything here is ShapeDtypeStruct-based: no parameter or activation is
+ever allocated.  Each (arch x shape) cell provides:
+
+  * abstract arguments with NamedShardings attached (weak-type-correct), and
+  * the step function to lower: train_step / prefill_step / decode_step.
+
+The GRNND build itself is dry-run as the pseudo-arch "grnnd-ann" (the
+paper's technique on the production mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.distributed import hints as H
+from repro.distributed import sharding as SH
+from repro.models import transformer as T
+from repro.train import optimizer as O
+from repro.train import train_step as TS
+
+PARAM_DTYPE = jnp.float32
+ACT_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def _with_hints(fn: Callable, mesh: Mesh, fsdp: bool = False) -> Callable:
+    """Trace `fn` under mesh hints: model blocks emit their explicitly-
+    sharded variants (EP MoE via shard_map, per-scan-iteration FSDP
+    gathers, etc.)."""
+    def wrapped(*args):
+        with H.use_hints(mesh, fsdp=fsdp):
+            return fn(*args)
+    return wrapped
+
+
+def parallelism_policy(cfg: ArchConfig, shape: ShapeConfig,
+                       mesh: Mesh) -> str:
+    """"tp" (shard params over model) or "dp_only" (replicate params, use
+    the model axis as extra data parallelism).
+
+    TP on a model whose layers are ~100 MB total cannot amortize the
+    per-layer activation collectives: a 130M model on TP=16 spends 60x
+    more time in all-gather/all-reduce than in compute (measured — see
+    EXPERIMENTS.md §Perf iteration m1).  Rule: replicate when the whole
+    model fits a single chip's HBM with room for optimizer state (<1B
+    params) AND the global batch can use the freed axis.
+    """
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    if cfg.param_count() < 1e9 and shape.global_batch % n_chips == 0:
+        return "dp_only"
+    # fp32 params + Adam = 12 bytes/param resident; TP-only residency is
+    # param_count*12/|model|.  Above ~12 GiB/chip: first try ZeRO-1
+    # (optimizer state sharded over data — no per-layer weight gathers);
+    # if the fp32 params ALONE exceed the budget, full FSDP (§Perf A5).
+    model_par = mesh.shape.get("model", 1)
+    p = cfg.param_count()
+    if p * 12 / model_par > 12e9:
+        if p * 4 / model_par > 12e9:
+            return "fsdp"
+        return "zero1"
+    return "tp"
+
+
+def abstract_params(cfg: ArchConfig, mesh: Mesh, tp: bool = True,
+                    fsdp: bool = False):
+    shapes = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, dtype=PARAM_DTYPE))
+    return SH.with_shardings(
+        shapes, SH.param_shardings(mesh, shapes, tp=tp, fsdp=fsdp))
+
+
+def abstract_opt_state(cfg: ArchConfig, mesh: Mesh, params_abs,
+                       tp: bool = True, fsdp: bool = False):
+    shapes = jax.eval_shape(O.init, params_abs)
+    return SH.with_shardings(
+        shapes, SH.opt_state_shardings(mesh, shapes, tp=tp, fsdp=fsdp))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                batch_axes=None) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.modality == "audio_tokens":
+        shapes = {"tokens": jax.ShapeDtypeStruct((b, s, cfg.n_codebooks),
+                                                 jnp.int32)}
+    elif cfg.modality == "vision_text":
+        shapes = {
+            "tokens": jax.ShapeDtypeStruct((b, s - cfg.vision_tokens),
+                                           jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.vision_dim), ACT_DTYPE),
+        }
+    else:
+        shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return SH.with_shardings(
+        shapes, SH.batch_shardings(mesh, shapes, batch_axes=batch_axes))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, s_max: int, mesh: Mesh):
+    shapes = jax.eval_shape(
+        lambda: T.make_cache(cfg, batch, s_max, dtype=CACHE_DTYPE))
+    return SH.with_shardings(shapes, SH.cache_shardings(mesh, shapes))
+
+
+def token_specs(cfg: ArchConfig, b: int, mesh: Mesh):
+    daxes = SH.data_axes(mesh)
+    tok_shape = (b, cfg.n_codebooks) if cfg.modality == "audio_tokens" \
+        else (b,)
+    spec = PSpec(daxes) if b % SH._axsize(mesh, daxes) == 0 and b > 1 \
+        else PSpec()
+    tok = jax.ShapeDtypeStruct(tok_shape, jnp.int32,
+                               sharding=NamedSharding(mesh, spec))
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32,
+                               sharding=NamedSharding(mesh, tok.sharding.spec
+                                                      if b > 1 else PSpec()))
+    return tok, pos
+
+
+# ---------------------------------------------------------------------------
+# step functions per shape kind
+# ---------------------------------------------------------------------------
+
+def make_cell(arch_name: str, shape_name: str, mesh: Mesh,
+              ce_chunk: int = 512, cost_probe: int = 0,
+              cfg_override: ArchConfig | None = None,
+              remat_policy: str = "full",
+              ) -> tuple[Callable, tuple]:
+    """Returns (fn, abstract_args) for one dry-run cell.
+
+    cost_probe=k > 0 truncates the arch to k pattern units and fully
+    unrolls the layer scans (and widens the CE chunk to one piece): XLA's
+    cost_analysis counts a while-loop body once, so true costs come from
+    the k=1/k=2 probes extrapolated linearly over the real unit count.
+    """
+    if arch_name == "grnnd-ann":
+        return _grnnd_cell(shape_name, mesh)
+
+    from repro.configs.base import truncate_units
+    cfg = cfg_override if cfg_override is not None else get_arch(arch_name)
+    unroll = False
+    if cost_probe:
+        cfg = truncate_units(cfg, cost_probe)
+        unroll = True
+        ce_chunk = 1 << 30
+    shape = SHAPES[shape_name]
+    params_abs = abstract_params(cfg, mesh)
+
+    if shape.kind == "train":
+        policy = parallelism_policy(cfg, shape, mesh)
+        if policy == "dp_only":
+            all_axes = tuple(a for a in ("pod", "data", "model")
+                             if a in mesh.shape)
+            params_abs = abstract_params(cfg, mesh, tp=False)
+            opt_abs = abstract_opt_state(cfg, mesh, params_abs, tp=False)
+            batch_abs = batch_specs(cfg, shape, mesh, batch_axes=all_axes)
+        elif policy == "fsdp":
+            params_abs = abstract_params(cfg, mesh, fsdp=True)
+            opt_abs = abstract_opt_state(cfg, mesh, params_abs, fsdp=True)
+            batch_abs = batch_specs(cfg, shape, mesh)
+        elif policy == "zero1":
+            # params stay TP-resident; only Adam mu/nu shard over data
+            opt_abs = abstract_opt_state(cfg, mesh, params_abs, fsdp=True)
+            batch_abs = batch_specs(cfg, shape, mesh)
+        else:
+            opt_abs = abstract_opt_state(cfg, mesh, params_abs)
+            batch_abs = batch_specs(cfg, shape, mesh)
+        state_abs = TS.TrainState(params_abs, opt_abs)
+        opt_cfg = O.AdamWConfig()
+        step = TS.make_train_step(cfg, opt_cfg, act_dtype=ACT_DTYPE,
+                                  ce_chunk=ce_chunk, scan_unroll=unroll,
+                                  remat_policy=remat_policy)
+        return _with_hints(step, mesh, fsdp=(policy == "fsdp")), \
+            (state_abs, batch_abs)
+
+    if shape.kind == "prefill":
+        batch_abs = batch_specs(cfg, shape, mesh)
+
+        def prefill_step(params, batch):
+            logits, caches, _ = T.prefill(params, cfg, batch,
+                                          act_dtype=ACT_DTYPE,
+                                          scan_unroll=unroll)
+            return logits, caches
+
+        return _with_hints(prefill_step, mesh), (params_abs, batch_abs)
+
+    # decode: one new token against a seq_len cache
+    b, s = shape.global_batch, shape.seq_len
+    caches_abs = cache_specs(cfg, b, s, mesh)
+    tok_abs, pos_abs = token_specs(cfg, b, mesh)
+
+    def decode(params, caches, tokens, pos):
+        return T.decode_step(params, cfg, caches, tokens, pos,
+                             act_dtype=ACT_DTYPE, scan_unroll=unroll)
+
+    return _with_hints(decode, mesh), (params_abs, caches_abs, tok_abs,
+                                       pos_abs)
+
+
+# ---------------------------------------------------------------------------
+# the paper's own technique on the production mesh
+# ---------------------------------------------------------------------------
+
+GRNND_SHAPES = {
+    "build_1m_d128": dict(n=1_048_576, d=128),
+    "build_1m_d960": dict(n=1_048_576, d=960),
+}
+
+
+def _grnnd_cell(shape_name: str, mesh: Mesh):
+    from repro.core import distributed as D
+    from repro.core.grnnd import GRNNDConfig
+    from repro.core.pools import Pool
+
+    spec = GRNND_SHAPES[shape_name]
+    n, d = spec["n"], spec["d"]
+    # perf iteration g2: vertices shard over EVERY mesh axis — GRNND has no
+    # tensor-parallel dimension, so an idle "model" axis silently
+    # replicates all per-vertex work 16x (measured in §Perf).
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    cfg = GRNNDConfig(s=24, r=48, t1=4, t2=6, pairs_per_vertex=48,
+                      chunk_size=None)
+
+    build_round = D.make_sharded_builder(mesh, axes, cfg, comm="a2a")
+
+    vshard = NamedSharding(mesh, PSpec(axes))
+    rshard = NamedSharding(mesh, PSpec())
+    x_abs = jax.ShapeDtypeStruct((n, d), jnp.float32, sharding=rshard)
+    ids_abs = jax.ShapeDtypeStruct((n, cfg.r), jnp.int32, sharding=vshard)
+    dists_abs = jax.ShapeDtypeStruct((n, cfg.r), jnp.float32, sharding=vshard)
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rshard)
+
+    def round_fn(x, ids, dists, key):
+        pool = D.P.Pool(ids, dists)
+        out = build_round(x, pool, key)
+        return out.ids, out.dists
+
+    return round_fn, (x_abs, ids_abs, dists_abs, key_abs)
+
+
+def cell_is_applicable(arch_name: str, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per DESIGN.md §5."""
+    if arch_name == "grnnd-ann":
+        return shape_name in GRNND_SHAPES, "grnnd shapes only"
+    cfg = get_arch(arch_name)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention stack: no sub-quadratic "
+                       "structure for 524k decode (DESIGN.md §5)")
+    return True, ""

@@ -1,0 +1,86 @@
+"""Training driver: --arch <id> [--steps N] with checkpoint/restart.
+
+CPU-scale by default (reduced config); pass --full for the real config (on
+TPU hardware).  Wires together: config -> model init -> sharded train step
+-> deterministic data pipeline -> checkpoint manager -> metrics log.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs import get_arch, reduced
+from repro.data import pipeline as PIPE
+from repro.models import transformer as T
+from repro.train import optimizer as O
+from repro.train import train_step as TS
+
+
+def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
+          full: bool = False, ckpt_dir: str | None = None,
+          save_every: int = 50, lr: float = 3e-4,
+          log_every: int = 10, resume: bool = True,
+          act_dtype=jnp.float32, stop_at: int | None = None):
+    cfg = get_arch(arch)
+    if not full:
+        cfg = reduced(cfg)
+
+    opt_cfg = O.AdamWConfig(lr=lr, total_steps=steps, warmup_steps=steps // 10)
+    step_fn = jax.jit(TS.make_train_step(cfg, opt_cfg, act_dtype=act_dtype))
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    state = TS.TrainState(params, O.init(params))
+
+    start = 0
+    if ckpt_dir and resume and (last := CKPT.latest_step(ckpt_dir)) is not None:
+        state = CKPT.restore(ckpt_dir, last, state)
+        start = last
+        print(f"resumed from step {last}")
+
+    history = []
+    t0 = time.time()
+    # stop_at simulates preemption: schedule stays tied to `steps`
+    end = min(steps, stop_at) if stop_at is not None else steps
+    for step in range(start, end):
+        batch_data = PIPE.batch_for_step(cfg, step, batch, seq)
+        state, metrics = step_fn(state, batch_data)
+        if (step + 1) % log_every == 0 or step == start:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["wall_s"] = round(time.time() - t0, 1)
+            history.append(m)
+            print(f"step {step+1:5d}  loss {m['loss']:.4f}  "
+                  f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.3f}", flush=True)
+        if ckpt_dir and (step + 1) % save_every == 0:
+            CKPT.save(ckpt_dir, step + 1, state)
+            CKPT.prune_old(ckpt_dir)
+    return state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    _, history = train(args.arch, steps=args.steps, batch=args.batch,
+                       seq=args.seq, full=args.full, ckpt_dir=args.ckpt_dir,
+                       lr=args.lr)
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(history, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Attention: GQA with RoPE, qk-norm, soft-capping, global/local (sliding
+window) variants, blockwise (flash-style) computation for long sequences,
+and single-token decode against a KV cache.
+
+Layout conventions:
+  activations x        (B, S, D)
+  q                    (B, S, H, Dh)
+  k, v                 (B, S, K, Dh)        K = n_kv_heads, G = H // K
+  KV cache             (B, S_max, K, Dh)
+
+Blockwise attention scans q-chunks (outer) and kv-chunks (inner) with an
+online-softmax carry — the memory-bounded formulation that long-context
+prefill requires (a 32k x 32k score matrix must never materialize), and the
+natural TPU structure (each chunk pair is an MXU-shaped matmul).
+Local layers slice a fixed-size KV window per q-chunk instead of scanning
+all of KV: O(S·window) compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.configs.base import ArchConfig
+
+NEG_INF = -2.0 ** 30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def init_attn_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h, k_, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = L.split_keys(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (d, h, dh), dtype=dtype),
+        "wk": L.dense_init(ks[1], (d, k_, dh), dtype=dtype),
+        "wv": L.dense_init(ks[2], (d, k_, dh), dtype=dtype),
+        "wo": L.dense_init(ks[3], (h, dh, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def qkv(params, cfg: ArchConfig, x, positions):
+    """Project + RoPE. x (B,S,D), positions (B,S) -> q,k,v."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    sin, cos = L.rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, sin, cos)
+    k = L.apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _scores(q, k, cfg: ArchConfig):
+    """q (B,Sq,H,Dh), k (B,Sk,K,Dh) -> (B,K,G,Sq,Sk) softcapped/scaled."""
+    b, sq, h, dh = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    qg = q.reshape(b, sq, kk, g, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (dh ** -0.5)
+    return L.softcap(s.astype(jnp.float32), cfg.attn_softcap)
+
+
+def _combine(scores, v):
+    """scores (B,K,G,Sq,Sk) fp32, v (B,Sk,K,Dh) -> (B,Sq,H,Dh)."""
+    b, kk, g, sq, sk = scores.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", scores.astype(v.dtype), v)
+    return out.reshape(b, sq, kk * g, v.shape[-1])
+
+
+def full_attention(q, k, v, cfg: ArchConfig, q_pos, k_pos, window: int = 0):
+    """Materialized-score attention (small S / decode / smoke tests)."""
+    s = _scores(q, k, cfg)                                    # (B,K,G,Sq,Sk)
+    mask = q_pos[:, None] >= k_pos[None, :]                   # causal
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return _combine(w, v)
+
+
+def blockwise_attention(
+    q, k, v, cfg: ArchConfig, *,
+    window: int = 0, q_chunk: int = 512, kv_chunk: int = 1024,
+):
+    """Online-softmax attention over chunk pairs; causal; optional window.
+
+    Global layers: inner scan over all KV chunks (skippable chunks are still
+    computed but fully masked — XLA's CSE keeps this simple; the perf pass
+    can early-exit).  Local layers: a single fixed-size KV slice per q-chunk.
+    """
+    b, s, h, dh = q.shape
+    q_chunk = min(q_chunk, s)
+    while s % q_chunk:
+        q_chunk //= 2
+    nq = s // q_chunk
+
+    def one_q_chunk(carry, qi):
+        p0 = qi * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, p0, q_chunk, axis=1)
+        q_pos = p0 + jnp.arange(q_chunk)
+
+        if window:
+            w = window
+            lsize = min(w + q_chunk, s)
+            start = jnp.clip(p0 + q_chunk - lsize, 0, s - lsize)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, lsize, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, lsize, axis=1)
+            k_pos = start + jnp.arange(lsize)
+            sc = _scores(qc, kc, cfg)
+            mask = (q_pos[:, None] >= k_pos[None, :]) & \
+                   (q_pos[:, None] - k_pos[None, :] < w)
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            out = _combine(jax.nn.softmax(sc, axis=-1), vc)
+            return carry, out
+
+        kv_c = min(kv_chunk, s)
+        while s % kv_c:
+            kv_c //= 2
+        nkv = s // kv_c
+        kk = k.shape[2]
+        g = h // kk
+
+        def one_kv_chunk(inner, ki):
+            m, l, acc = inner
+            t0 = ki * kv_c
+            kc = jax.lax.dynamic_slice_in_dim(k, t0, kv_c, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, t0, kv_c, axis=1)
+            k_pos = t0 + jnp.arange(kv_c)
+            sc = _scores(qc, kc, cfg)                       # (B,K,G,qc,kv_c)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vc.dtype), vc)
+            acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kk, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kk, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kk, g, q_chunk, dh), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            one_kv_chunk, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, q_chunk, h, dh)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_q_chunk, (), jnp.arange(nq))
+    # outs: (nq, B, q_chunk, H, Dh) -> (B, S, H, Dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+
+
+def decode_attention(q1, cache_k, cache_v, cfg: ArchConfig, pos, window: int = 0):
+    """One-token attention: q1 (B,1,H,Dh) against cache (B,Smax,K,Dh).
+
+    `pos` (B,) is the index where the current token sits (cache already
+    updated).  Mask admits cache slots <= pos (and within the window for
+    local layers).
+    """
+    smax = cache_k.shape[1]
+    sc = _scores(q1, cache_k, cfg)                       # (B,K,G,1,Smax)
+    k_pos = jnp.arange(smax)
+    mask = k_pos[None, :] <= pos[:, None]                # (B, Smax)
+    if window:
+        mask &= (pos[:, None] - k_pos[None, :]) < window
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    return _combine(w, cache_v)
+
+
+def attention_block(params, cfg: ArchConfig, x, positions, *,
+                    kind: str, blockwise_threshold: int = 8192):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = qkv(params, cfg, x, positions)
+    window = cfg.window if kind == "local" else 0
+    s = x.shape[1]
+    if s > blockwise_threshold or (window and s > 2 * window):
+        out = blockwise_attention(q, k, v, cfg, window=window)
+    else:
+        qp = positions[0]
+        out = full_attention(q, k, v, cfg, qp, qp, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def attention_decode_block(params, cfg: ArchConfig, x1, cache, pos, *, kind: str):
+    """Single-token decode. x1 (B,1,D); cache dict with k/v (B,Smax,K,Dh).
+
+    Returns (out (B,1,D), updated cache).
+    """
+    b = x1.shape[0]
+    q, k_new, v_new = qkv(params, cfg, x1, pos[:, None])
+    ck = jax.vmap(
+        lambda c, upd, p: jax.lax.dynamic_update_slice_in_dim(c, upd, p, 0)
+    )(cache["k"], k_new, pos)
+    cv = jax.vmap(
+        lambda c, upd, p: jax.lax.dynamic_update_slice_in_dim(c, upd, p, 0)
+    )(cache["v"], v_new, pos)
+    window = cfg.window if kind == "local" else 0
+    out = decode_attention(q, ck, cv, cfg, pos, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x1.dtype))
+    return out, {"k": ck, "v": cv}

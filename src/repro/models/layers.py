@@ -1,0 +1,58 @@
+"""Shared model primitives: RMSNorm, RoPE, gated MLP, soft-capping, inits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping; identity when cap == 0."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple:
+    """positions (...,) -> (sin, cos) of shape (..., head_dim // 2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.sin(angle), jnp.cos(angle)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, Dh); sin/cos (..., S, Dh/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def gated_mlp(x: jnp.ndarray, wi_gate, wi_up, wo, act=jax.nn.silu) -> jnp.ndarray:
+    """SwiGLU-style gated MLP: (x @ Wg).act * (x @ Wu) @ Wo."""
+    g = act(jnp.einsum("...d,df->...f", x, wi_gate.astype(x.dtype)))
+    u = jnp.einsum("...d,df->...f", x, wi_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", g * u, wo.astype(x.dtype))
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

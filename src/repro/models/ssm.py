@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan,
+O(1)-state decode, and a naive recurrence oracle for tests.
+
+Recurrence (per batch, per head; state h in R^{hd x st}):
+    h_t = a_t * h_{t-1} + (dt_t * x_t) b_t^T          a_t = exp(dt_t * A)
+    y_t = h_t c_t + D * x_t
+
+The chunked (SSD) formulation splits S into chunks of Q: within a chunk the
+output is an attention-like masked matmul against the decay matrix; across
+chunks a scan carries the (nh, hd, st) state.  This is the TPU-native
+structure: both the intra-chunk part and the state updates are MXU matmuls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def init_ssm_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner
+    st = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_dim = di + 2 * st
+    d_in_proj = 2 * di + 2 * st + nh
+    ks = L.split_keys(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], (d, d_in_proj), dtype=dtype),
+        "conv_w": L.dense_init(ks[1], (cfg.ssm_conv, conv_dim), dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": L.dense_init(ks[3], (di, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * st]
+    dt = zxbcdt[..., di + di + 2 * st:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv over (B, S, C) with taps (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + bias[None, None, :])
+
+
+def _ssd_chunked(xh, a, b, c, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,nh,hd) — dt-scaled inputs;  a (B,S,nh) — per-step decay in (0,1];
+    b, c (B,S,st);  h0 (B,nh,hd,st) initial state.
+    Returns (y (B,S,nh,hd), h_final).
+    """
+    bsz, s, nh, hd = xh.shape
+    st = b.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nchunks = s // q
+
+    xh_c = xh.reshape(bsz, nchunks, q, nh, hd)
+    a_c = a.reshape(bsz, nchunks, q, nh)
+    b_c = b.reshape(bsz, nchunks, q, st)
+    c_c = c.reshape(bsz, nchunks, q, st)
+
+    la = jnp.log(jnp.maximum(a_c, 1e-37))
+    cum = jnp.cumsum(la, axis=2)                         # (B,NC,Q,nh) log prod_{t<=i}
+
+    def step(h, inp):
+        xh_i, a_i, b_i, c_i, cum_i, la_i = inp           # chunk tensors (B,Q,...)
+        # intra-chunk: y[i] = sum_{j<=i} (c_i.b_j) exp(cum_i - cum_j) xh[j]
+        li = cum_i[:, :, None, :] - cum_i[:, None, :, :]  # (B,Q,Q,nh) log decay i<-j
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        # mask in LOG space: exp of masked-out (positive) entries would
+        # overflow to inf and poison gradients through the where.
+        li = jnp.where(causal[None, :, :, None], li, -1e30)
+        dec = jnp.exp(li)
+        cb = jnp.einsum("bis,bjs->bij", c_i, b_i)         # (B,Q,Q)
+        # NOTE (perf iteration m2, refuted): casting this contraction to
+        # bf16 was hypothesized to cut the memory term ~15%; measured
+        # bytes went UP 4% (extra convert traffic) and SSD accuracy left
+        # the 1e-4 envelope — reverted.  See EXPERIMENTS.md §Perf.
+        y_intra = jnp.einsum("bij,bijh,bjhd->bihd",
+                             cb, dec, xh_i)
+        # inter-chunk: y[i] += (prod_{t<=i} a) * c_i^T h_in
+        y_inter = jnp.einsum("bis,bhds,bih->bihd",
+                             c_i, h, jnp.exp(cum_i))
+        y = y_intra + y_inter
+        # state update: h_out = (prod_chunk a) h_in + sum_j (prod_{t>j} a) xh_j b_j^T
+        tot = cum_i[:, -1, :]                             # (B,nh)
+        rem = tot[:, None, :] - cum_i                     # (B,Q,nh) log prod_{t>j}
+        h_new = jnp.exp(tot)[:, :, None, None] * h + jnp.einsum(
+            "bjh,bjhd,bjs->bhds", jnp.exp(rem), xh_i, b_i)
+        return h_new, y
+
+    xs = (
+        jnp.moveaxis(xh_c, 1, 0), jnp.moveaxis(a_c, 1, 0),
+        jnp.moveaxis(b_c, 1, 0), jnp.moveaxis(c_c, 1, 0),
+        jnp.moveaxis(cum, 1, 0), jnp.moveaxis(la.reshape(bsz, nchunks, q, nh), 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, hd)
+    return y, h_final
+
+
+def ssd_naive(xh, a, b, c, h0):
+    """Sequential oracle for tests: same signature as _ssd_chunked."""
+    def step(h, inp):
+        xh_t, a_t, b_t, c_t = inp
+        h = a_t[:, :, None, None] * h + jnp.einsum("bhd,bs->bhds", xh_t, b_t)
+        y = jnp.einsum("bhds,bs->bhd", h, c_t)
+        return h, y
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def ssm_block(params, cfg: ArchConfig, x, *, h0=None, return_cache=False):
+    """Full-sequence Mamba2 block. x (B,S,D) -> (B,S,D) [, cache]."""
+    bsz, s, _ = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    xs = xbc[..., :di].reshape(bsz, s, nh, hd).astype(jnp.float32)
+    b = xbc[..., di:di + st].astype(jnp.float32)
+    c = xbc[..., di + st:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["A_log"])[None, None, :] * dt)   # (B,S,nh)
+    xh = xs * dt[..., None]
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, st), jnp.float32)
+    y, h_final = _ssd_chunked(xh, a, b, c, h0, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    if return_cache:
+        width = cfg.ssm_conv
+        # pre-activation xbc tail for the decode conv window
+        zxbcdt_tail = zxbcdt[:, -(width - 1):, :]
+        _, xbc_raw, _ = _split_proj(cfg, zxbcdt_tail)
+        return out, {"h": h_final, "conv": xbc_raw}
+    return out
+
+
+def ssm_decode_block(params, cfg: ArchConfig, x1, cache):
+    """Single-token decode. x1 (B,1,D); cache {h (B,nh,hd,st), conv (B,W-1,C)}."""
+    bsz = x1.shape[0]
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    width = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x1, params["in_proj"].astype(x1.dtype))
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)                  # (B,1,·)
+
+    conv_win = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B,W,C)
+    w = params["conv_w"].astype(x1.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_win, w) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :]                    # (B,1,C)
+
+    xs = xbc[..., :di].reshape(bsz, nh, hd).astype(jnp.float32)
+    b = xbc[:, 0, di:di + st].astype(jnp.float32)
+    c = xbc[:, 0, di + st:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["A_log"])[None, :] * dt)       # (B,nh)
+    xh = xs * dt[..., None]
+
+    h = a[:, :, None, None] * cache["h"] + jnp.einsum("bhd,bs->bhds", xh, b)
+    y = jnp.einsum("bhds,bs->bhd", h, c) + params["D"][None, :, None] * xs
+    y = y.reshape(bsz, 1, di).astype(x1.dtype)
+
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x1.dtype))
+    return out, {"h": h, "conv": conv_win[:, 1:, :]}

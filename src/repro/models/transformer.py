@@ -1,0 +1,462 @@
+"""Model assembly: config-driven decoder stacks for all assigned families.
+
+Layers are grouped into the arch's repeating pattern unit and scanned with
+jax.lax.scan over stacked parameters (leading axis = number of repeats) —
+this keeps HLO size O(pattern) instead of O(n_layers), which matters for
+62/81/94-layer configs at 512-device compile.
+
+Heterogeneous patterns (gemma3's 5 local + 1 global, zamba2's 5 ssm +
+shared-attn) are expressed as a *segment* = (tuple of per-position layer
+descriptors, n_repeats); non-divisible tails get their own 1-repeat segment.
+Zamba2's shared attention block has ONE parameter set (not scanned) applied
+at every `shared_attn` position — each occurrence keeps its own KV cache.
+
+Modality frontends per the assignment: audio ([B,S,ncb] token grids, summed
+codebook embeddings, per-codebook heads) and vision (precomputed patch
+embeddings projected into the first `vision_tokens` positions) are stubs at
+the input_specs level; everything downstream is real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+def layer_descs(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """Per-layer (kind, mlp_kind)."""
+    out = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind == "ssm":
+            out.append(("ssm", "none"))
+        else:
+            mlp = "moe" if (cfg.n_experts and i >= cfg.first_k_dense
+                            and kind != "shared_attn") else "dense"
+            out.append((kind, mlp))
+    return out
+
+
+def build_segments(cfg: ArchConfig) -> list[tuple[tuple, int]]:
+    descs = layer_descs(cfg)
+    segments: list[tuple[tuple, int]] = []
+    i = 0
+    if cfg.first_k_dense:
+        segments.append((tuple(descs[:cfg.first_k_dense]), 1))
+        i = cfg.first_k_dense
+    body = descs[i:]
+    unit = len(cfg.layer_pattern)
+    if unit > len(body):
+        unit = max(len(body), 1)
+    n_rep = len(body) // unit
+    if n_rep:
+        segments.append((tuple(body[:unit]), n_rep))
+    tail = body[n_rep * unit:]
+    if tail:
+        segments.append((tuple(tail), 1))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, kind: str, mlp_kind: str, dtype):
+    d = cfg.d_model
+    ks = L.split_keys(key, 6)
+    if kind == "ssm":
+        return {"ln": jnp.zeros((d,), dtype),
+                "ssm": S.init_ssm_params(ks[0], cfg, dtype)}
+    if kind == "shared_attn":
+        return {}  # weights live in params["shared_attn"]
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": A.init_attn_params(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((d,), dtype),
+    }
+    if cfg.post_norm:
+        p["post_ln1"] = jnp.zeros((d,), dtype)
+        p["post_ln2"] = jnp.zeros((d,), dtype)
+    if mlp_kind == "moe":
+        p["moe"] = M.init_moe_params(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = {
+            "wi_gate": L.dense_init(ks[2], (d, cfg.d_ff), dtype=dtype),
+            "wi_up": L.dense_init(ks[3], (d, cfg.d_ff), dtype=dtype),
+            "wo": L.dense_init(ks[4], (cfg.d_ff, d), dtype=dtype),
+        }
+    return p
+
+
+def _init_shared_attn(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = L.split_keys(key, 5)
+    return {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": A.init_attn_params(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "mlp": {
+            "wi_gate": L.dense_init(ks[1], (d, cfg.d_ff), dtype=dtype),
+            "wi_up": L.dense_init(ks[2], (d, cfg.d_ff), dtype=dtype),
+            "wo": L.dense_init(ks[3], (cfg.d_ff, d), dtype=dtype),
+        },
+    }
+
+
+def _apply_layer(p, shared_p, cfg: ArchConfig, kind: str, mlp_kind: str,
+                 x, positions, aux_acc):
+    """Full-sequence layer application. Returns (x, cache_entry, aux)."""
+    if kind == "ssm":
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        out, cache = S.ssm_block(p["ssm"], cfg, h, return_cache=True)
+        return x + out, cache, aux_acc
+
+    lp = shared_p if kind == "shared_attn" else p
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, (k, v) = A.attention_block(
+        lp["attn"], cfg, h, positions,
+        kind=("global" if kind == "shared_attn" else kind))
+    if cfg.post_norm:
+        attn_out = L.rms_norm(attn_out, lp["post_ln1"], cfg.norm_eps)
+    x = x + attn_out
+
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if mlp_kind == "moe":
+        mlp_out, aux = M.moe_block(lp["moe"], cfg, h)
+        aux_acc = aux_acc + aux["moe_lb_loss"]
+    else:
+        mlp_out = L.gated_mlp(h, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"],
+                              lp["mlp"]["wo"])
+    if cfg.post_norm:
+        mlp_out = L.rms_norm(mlp_out, lp["post_ln2"], cfg.norm_eps)
+    return x + mlp_out, {"k": k, "v": v}, aux_acc
+
+
+def _apply_layer_decode(p, shared_p, cfg: ArchConfig, kind: str,
+                        mlp_kind: str, x1, cache, pos):
+    """Single-token layer application. Returns (x1, updated cache)."""
+    if kind == "ssm":
+        h = L.rms_norm(x1, p["ln"], cfg.norm_eps)
+        out, cache = S.ssm_decode_block(p["ssm"], cfg, h, cache)
+        return x1 + out, cache
+
+    lp = shared_p if kind == "shared_attn" else p
+    h = L.rms_norm(x1, lp["ln1"], cfg.norm_eps)
+    attn_out, cache = A.attention_decode_block(
+        lp["attn"], cfg, h, cache, pos,
+        kind=("global" if kind == "shared_attn" else kind))
+    if cfg.post_norm:
+        attn_out = L.rms_norm(attn_out, lp["post_ln1"], cfg.norm_eps)
+    x1 = x1 + attn_out
+
+    h = L.rms_norm(x1, lp["ln2"], cfg.norm_eps)
+    if mlp_kind == "moe":
+        mlp_out, _ = M.moe_block(lp["moe"], cfg, h)
+    else:
+        mlp_out = L.gated_mlp(h, lp["mlp"]["wi_gate"], lp["mlp"]["wi_up"],
+                              lp["mlp"]["wo"])
+    if cfg.post_norm:
+        mlp_out = L.rms_norm(mlp_out, lp["post_ln2"], cfg.norm_eps)
+    return x1 + mlp_out, cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    keys = L.split_keys(key, 8)
+    segments = build_segments(cfg)
+    p: dict = {"final_norm": jnp.zeros((cfg.d_model,), dtype)}
+
+    if cfg.modality == "audio_tokens":
+        p["codebook_embed"] = L.dense_init(
+            keys[0], (cfg.n_codebooks, cfg.vocab, cfg.d_model),
+            in_axis=2, dtype=dtype)
+        p["codebook_head"] = L.dense_init(
+            keys[1], (cfg.n_codebooks, cfg.d_model, cfg.vocab),
+            in_axis=1, dtype=dtype)
+    else:
+        p["embed"] = L.dense_init(
+            keys[0], (cfg.vocab, cfg.d_model), in_axis=1, dtype=dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_init(
+                keys[1], (cfg.d_model, cfg.vocab), dtype=dtype)
+    if cfg.modality == "vision_text":
+        p["vision_proj"] = {
+            "w1": L.dense_init(keys[2], (cfg.vision_dim, cfg.d_model),
+                               dtype=dtype),
+            "w2": L.dense_init(keys[3], (cfg.d_model, cfg.d_model),
+                               dtype=dtype),
+        }
+    if any(k == "shared_attn" for k in cfg.layer_kinds()):
+        p["shared_attn"] = _init_shared_attn(keys[4], cfg, dtype)
+
+    seg_params = []
+    kseg = keys[5]
+    for si, (desc, n_rep) in enumerate(segments):
+        pos_params = []
+        for pi, (kind, mlp_kind) in enumerate(desc):
+            kpos = jax.random.fold_in(jax.random.fold_in(kseg, si), pi)
+            stacked = jax.vmap(
+                lambda kk: _init_layer(kk, cfg, kind, mlp_kind, dtype)
+            )(jax.random.split(kpos, n_rep))
+            pos_params.append(stacked)
+        seg_params.append(pos_params)
+    p["segments"] = seg_params
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ArchConfig, batch, act_dtype=jnp.bfloat16):
+    """batch -> (x (B,S,D), positions (S,))."""
+    if cfg.modality == "audio_tokens":
+        toks = batch["tokens"]                              # (B,S,ncb)
+        emb = params["codebook_embed"]                      # (ncb,V,D)
+        x = jnp.zeros((*toks.shape[:2], cfg.d_model), act_dtype)
+        for cb in range(cfg.n_codebooks):
+            x = x + emb[cb].astype(act_dtype)[toks[..., cb]]
+    elif cfg.modality == "vision_text":
+        toks = batch["tokens"]                              # (B,S_text)
+        patches = batch["patch_embeds"]                     # (B,P,vd)
+        vp = params["vision_proj"]
+        pe = jnp.einsum("bpv,vd->bpd", patches.astype(act_dtype),
+                        vp["w1"].astype(act_dtype))
+        pe = jnp.einsum("bpd,de->bpe", jax.nn.gelu(pe),
+                        vp["w2"].astype(act_dtype))
+        te = params["embed"].astype(act_dtype)[toks]
+        x = jnp.concatenate([pe, te], axis=1)
+    else:
+        x = params["embed"].astype(act_dtype)[batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, act_dtype)
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def lm_logits(params, cfg: ArchConfig, x):
+    x32 = x.astype(jnp.float32)
+    if cfg.modality == "audio_tokens":
+        logits = jnp.einsum("bsd,cdv->bscv", x32,
+                            params["codebook_head"].astype(jnp.float32))
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x32,
+                            params["embed"].astype(jnp.float32))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x32,
+                            params["lm_head"].astype(jnp.float32))
+    return L.softcap(logits, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    "full": None,  # recompute everything inside the group
+    "dots": None,  # filled lazily: save matmul outputs, recompute the rest
+}
+
+
+def _remat_policy(name: str):
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return None
+
+
+def forward(params, cfg: ArchConfig, batch, *, act_dtype=jnp.bfloat16,
+            return_cache: bool = False, remat: bool = True,
+            return_hidden: bool = False, scan_unroll: bool = False,
+            remat_policy: str = "full"):
+    """Full-sequence forward. Returns (logits|hidden, aux[, cache]).
+
+    scan_unroll fully unrolls the layer-group scans — used by the dry-run
+    cost probes, because XLA's cost_analysis counts a while-loop body once
+    regardless of trip count.
+    """
+    segments = build_segments(cfg)
+    x, positions = embed_inputs(params, cfg, batch, act_dtype)
+    bpos = jnp.broadcast_to(positions[None, :], x.shape[:2])
+    shared_p = params.get("shared_attn")
+    aux = jnp.zeros((), jnp.float32)
+    caches = []
+
+    # Under the FSDP policy, weights live sharded over the data axes; the
+    # all-gather must happen PER SCAN ITERATION (one layer group live at a
+    # time), not hoisted above the scan (which would materialize the whole
+    # gathered stack — measured 142 GiB of transients on qwen3-235b).  A
+    # TP-only sharding constraint inside the body (model axis kept, data
+    # axes dropped) forces the per-iteration gather.
+    from repro.distributed import hints as _H
+    _hints = _H.get_hints()
+    _fsdp = _hints is not None and _hints.fsdp
+
+    def _slice_gatherer(pos_params):
+        if not _fsdp:
+            return lambda tree: tree
+        from jax.lax import with_sharding_constraint as _wsc
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.distributed.sharding import _param_spec, _path_str
+        mesh = _hints.mesh
+
+        def spec_of(path, leaf):
+            ps = "segments/" + _path_str(path)
+            dims = list(_param_spec(ps, leaf.shape, mesh, stacked=True))
+            dims += [None] * (leaf.ndim - len(dims))
+            return NamedSharding(mesh, PartitionSpec(*dims[1:]))
+
+        specs = jax.tree_util.tree_map_with_path(spec_of, pos_params)
+        return lambda tree: jax.tree.map(_wsc, tree, specs)
+
+    for (desc, n_rep), pos_params in zip(segments, params["segments"]):
+        _gather_slice = _slice_gatherer(pos_params)
+
+        def group_body(carry, group_params, desc=desc,
+                       _gather_slice=_gather_slice):
+            x, aux = carry
+            group_params = _gather_slice(group_params)
+            entries = []
+            for pi, (kind, mlp_kind) in enumerate(desc):
+                x, cache_e, aux = _apply_layer(
+                    group_params[pi], shared_p, cfg, kind, mlp_kind,
+                    x, bpos, aux)
+                entries.append(cache_e if return_cache else None)
+            return (x, aux), entries
+
+        if remat:
+            body = jax.checkpoint(group_body,
+                                  policy=_remat_policy(remat_policy))
+        else:
+            body = group_body
+        (x, aux), seg_cache = jax.lax.scan(body, (x, aux), pos_params,
+                                           unroll=scan_unroll)
+        caches.append(seg_cache)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = x if return_hidden else lm_logits(params, cfg, x)
+    if return_cache:
+        return out, aux, caches
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ArchConfig, batch_size: int, s_max: int,
+               dtype=jnp.bfloat16):
+    """Empty per-segment cache pytree (leading n_rep axis per position)."""
+    segments = build_segments(cfg)
+    caches = []
+    for desc, n_rep in segments:
+        entries = []
+        for kind, _ in desc:
+            if kind == "ssm":
+                entries.append({
+                    "h": jnp.zeros((n_rep, batch_size, cfg.ssm_heads,
+                                    cfg.ssm_head_dim, cfg.ssm_state),
+                                   jnp.float32),
+                    "conv": jnp.zeros((n_rep, batch_size, cfg.ssm_conv - 1,
+                                       cfg.d_inner + 2 * cfg.ssm_state),
+                                      dtype),
+                })
+            else:
+                entries.append({
+                    "k": jnp.zeros((n_rep, batch_size, s_max,
+                                    cfg.n_kv_heads, cfg.head_dim), dtype),
+                    "v": jnp.zeros((n_rep, batch_size, s_max,
+                                    cfg.n_kv_heads, cfg.head_dim), dtype),
+                })
+        caches.append(entries)
+    return caches
+
+
+def prefill(params, cfg: ArchConfig, batch, s_max: int | None = None,
+            act_dtype=jnp.bfloat16, scan_unroll: bool = False):
+    """Process the prompt; returns (last-position logits, cache, length)."""
+    hidden, aux, caches = forward(params, cfg, batch, act_dtype=act_dtype,
+                                  return_cache=True, remat=False,
+                                  return_hidden=True,
+                                  scan_unroll=scan_unroll)
+    # only the last position's logits are needed — never materialize (B,S,V)
+    logits = lm_logits(params, cfg, hidden[:, -1:])
+    s = hidden.shape[1]
+    if s_max is not None and s_max > s:
+        pad = s_max - s
+
+        def pad_kv(c):
+            if "k" in c:
+                return {
+                    "k": jnp.pad(c["k"], ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0))),
+                    "v": jnp.pad(c["v"], ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0))),
+                }
+            return c
+
+        caches = [[pad_kv(e) for e in seg] for seg in caches]
+    return logits[:, -1], caches, s
+
+
+def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
+                batch_extra=None, act_dtype=jnp.bfloat16,
+                scan_unroll: bool = False):
+    """One decode step for every sequence in the batch.
+
+    tokens: (B,) int32 (or (B, ncb) for audio); pos: (B,) current index.
+    Returns (logits (B, V) or (B, ncb, V), updated caches).
+    """
+    segments = build_segments(cfg)
+    if cfg.modality == "audio_tokens":
+        toks = tokens[:, None, :]                            # (B,1,ncb)
+        batch = {"tokens": toks}
+    else:
+        batch = {"tokens": tokens[:, None]}
+        if batch_extra:
+            batch.update(batch_extra)
+    if cfg.modality == "vision_text":
+        # decode is text-only; patches were consumed at prefill
+        x = params["embed"].astype(act_dtype)[batch["tokens"]]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, act_dtype)
+    else:
+        x, _ = embed_inputs(params, cfg, batch, act_dtype)
+
+    shared_p = params.get("shared_attn")
+    new_caches = []
+    for (desc, n_rep), pos_params, seg_cache in zip(
+            segments, params["segments"], caches):
+
+        def group_body(x, xs, desc=desc):
+            group_params, group_cache = xs
+            new_entries = []
+            for pi, (kind, mlp_kind) in enumerate(desc):
+                x, cache_e = _apply_layer_decode(
+                    group_params[pi], shared_p, cfg, kind, mlp_kind,
+                    x, group_cache[pi], pos)
+                new_entries.append(cache_e)
+            return x, new_entries
+
+        x, new_seg = jax.lax.scan(group_body, x, (pos_params, seg_cache),
+                                  unroll=scan_unroll)
+        new_caches.append(new_seg)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, x)
+    return logits[:, 0], new_caches

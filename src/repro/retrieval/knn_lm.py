@@ -1,0 +1,70 @@
+"""kNN-LM: the GRNND index as a first-class serving feature.
+
+A datastore of (hidden-state, next-token) pairs is indexed with the paper's
+GRNND graph; at decode time the LM's last hidden state queries the graph,
+retrieved neighbors vote on the next token, and the distribution is fused:
+
+    p(y) = (1 - lam) * p_LM(y) + lam * softmax_k(-d_k / tau) [y == y_k]
+
+This is the integration point described in DESIGN.md §4.2: the paper's
+contribution (fast graph construction) directly shortens the serving
+pipeline's index-build stage.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grnnd
+from repro.core.pools import Pool
+from repro.core.search import search
+
+
+class KNNDatastore(NamedTuple):
+    keys: jnp.ndarray        # (N, D) hidden states
+    values: jnp.ndarray      # (N,) next-token ids
+    graph: jnp.ndarray       # (N, R) GRNND adjacency
+
+
+def build_datastore(key, hidden_states, next_tokens,
+                    cfg: grnnd.GRNNDConfig | None = None) -> KNNDatastore:
+    """Index (hidden, next-token) pairs with a GRNND graph."""
+    cfg = cfg or grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=3,
+                                   pairs_per_vertex=24)
+    x = hidden_states.astype(jnp.float32)
+    pool = grnnd.build_graph(key, x, cfg)
+    return KNNDatastore(keys=x, values=next_tokens.astype(jnp.int32),
+                        graph=pool.ids)
+
+
+def knn_logits(store: KNNDatastore, queries: jnp.ndarray, vocab: int,
+               *, k: int = 8, ef: int = 32, tau: float = 10.0) -> jnp.ndarray:
+    """Retrieve k neighbors per query and form a kNN next-token distribution."""
+    res = search(store.keys, store.graph, queries.astype(jnp.float32),
+                 k=k, ef=ef)
+    w = jax.nn.softmax(-res.dists / tau, axis=-1)          # (Q, k)
+    w = jnp.where(res.ids >= 0, w, 0.0)
+    toks = store.values[jnp.clip(res.ids, 0)]              # (Q, k)
+    probs = jnp.zeros((queries.shape[0], vocab), jnp.float32)
+    probs = probs.at[jnp.arange(queries.shape[0])[:, None], toks].add(w)
+    denom = jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    return jnp.log(jnp.maximum(probs / denom, 1e-9))
+
+
+def fuse(lm_logits: jnp.ndarray, knn_log_probs: jnp.ndarray,
+         lam: float = 0.25) -> jnp.ndarray:
+    """Log-space interpolation of LM and kNN distributions."""
+    lm_lp = jax.nn.log_softmax(lm_logits, axis=-1)
+    return jnp.logaddexp(lm_lp + jnp.log1p(-lam),
+                         knn_log_probs + jnp.log(lam))
+
+
+def make_logit_hook(store: KNNDatastore, hidden_fn, vocab: int,
+                    lam: float = 0.25, **knn_kw):
+    """Adapter for ServeEngine(logit_hook=...): fuses retrieval into decode."""
+    def hook(lm_logits, hidden):
+        klp = knn_logits(store, hidden, vocab, **knn_kw)
+        return fuse(lm_logits, klp, lam)
+    return hook

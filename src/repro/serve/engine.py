@@ -1,0 +1,86 @@
+"""Batched serving engine: prefill + decode loop with KV/SSM caches.
+
+A deliberately small but real engine: fixed-batch continuous decoding with
+greedy/temperature sampling, per-sequence stop handling, and an optional
+GRNND-backed kNN-LM fusion hook (retrieval/knn_lm.py).  The step functions
+are jit-compiled once per (batch, s_max) bucket.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, s_max: int,
+                 act_dtype=jnp.bfloat16,
+                 logit_hook: Callable | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.s_max = s_max
+        self.act_dtype = act_dtype
+        self.logit_hook = logit_hook
+
+        self._prefill = jax.jit(self._prefill_impl)
+        # donate the caches: decode updates them in place (no per-step copy
+        # of the multi-GiB KV buffers)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    def _prefill_impl(self, params, batch):
+        logits, caches, plen = T.prefill(
+            params, self.cfg, batch, s_max=self.s_max,
+            act_dtype=self.act_dtype)
+        return logits, caches, plen
+
+    def _decode_impl(self, params, caches, tokens, pos, key):
+        logits, caches = T.decode_step(params, self.cfg, caches, tokens, pos,
+                                       act_dtype=self.act_dtype)
+        return logits, caches
+
+    @staticmethod
+    def _sample(key, logits, temperature: float):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch, *, max_new_tokens: int, temperature: float = 0.0,
+                 key=None, eos_id: int | None = None,
+                 return_hidden: bool = False):
+        """Prefill the prompt batch, then decode greedily/sampled.
+
+        Returns dict with tokens (B, max_new_tokens) and per-step logits
+        summaries.
+        """
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, caches, plen = self._prefill(self.params, batch)
+        b = logits.shape[0]
+        pos = jnp.full((b,), plen, jnp.int32)
+        done = jnp.zeros((b,), bool)
+
+        outs = []
+        for step in range(max_new_tokens):
+            key, k_s = jax.random.split(key)
+            if self.logit_hook is not None:
+                logits = self.logit_hook(logits)
+            tok = self._sample(k_s, logits, temperature)
+            if cfg.modality != "audio_tokens" and eos_id is not None:
+                done = done | (tok == eos_id)
+                tok = jnp.where(done, eos_id, tok)
+            outs.append(tok)
+            logits, caches = self._decode(self.params, caches, tok, pos, k_s)
+            pos = pos + 1
+            if eos_id is not None and bool(jnp.all(done)):
+                break
+
+        return {
+            "tokens": jnp.stack(outs, axis=1),
+            "final_pos": pos,
+        }

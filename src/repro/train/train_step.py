@@ -1,0 +1,138 @@
+"""Loss + train step: CE over next-token targets, microbatch gradient
+accumulation, optional int8 gradient compression for the cross-pod (DCN)
+reduction, MoE aux-loss folding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.train import optimizer as O
+
+
+def _targets_from(batch, cfg: ArchConfig):
+    toks = batch["tokens"]
+    if cfg.modality == "vision_text":
+        # loss only on text positions; logits cover [patches | text]
+        return toks
+    return toks
+
+
+def _ce_from_hidden(params, cfg: ArchConfig, hidden, targets,
+                    chunk: int = 512):
+    """Sequence-chunked cross-entropy: the (B, S, V) logits tensor is never
+    materialized (68 GB/device for a 262k vocab at 4k seq) — each scan step
+    computes one S-chunk of logits in fp32, reduces to a scalar, and the
+    remat'd backward recomputes it.
+    """
+    b, s = hidden.shape[:2]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad)) + ((0, 0),) *
+                         (hidden.ndim - 2))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)) + ((0, 0),) *
+                          (targets.ndim - 2), constant_values=-1)
+    n_chunks = hidden.shape[1] // chunk
+
+    def body(total, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        t = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        logits = T.lm_logits(params, cfg, h)            # fp32, chunk-sized
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        tc = jnp.clip(t, 0)
+        nll = -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+        nll = jnp.where(t >= 0, nll, 0.0)
+        return total + jnp.sum(nll), None
+
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(n_chunks))
+    denom = jnp.maximum(jnp.sum((targets >= 0).astype(jnp.float32)), 1.0)
+    return total / denom
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, aux_weight: float = 0.01,
+            act_dtype=jnp.bfloat16, remat: bool = True,
+            ce_chunk: int = 512, scan_unroll: bool = False,
+            remat_policy: str = "full"):
+    """Next-token cross-entropy (mean over predicted positions)."""
+    hidden, aux = T.forward(params, cfg, batch, act_dtype=act_dtype,
+                            remat=remat, return_hidden=True,
+                            scan_unroll=scan_unroll,
+                            remat_policy=remat_policy)
+    toks = _targets_from(batch, cfg)
+    if cfg.modality == "vision_text":
+        p = cfg.vision_tokens
+        hidden = hidden[:, p:]
+    pred_h = hidden[:, :-1]
+    tgt = toks[:, 1:]
+    ce = _ce_from_hidden(params, cfg, pred_h, tgt, chunk=ce_chunk)
+    return ce + aux_weight * aux, {"ce": ce, "moe_aux": aux}
+
+
+class TrainState(NamedTuple):
+    params: any
+    opt: O.AdamWState
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: O.AdamWConfig, *,
+                    microbatches: int = 1, aux_weight: float = 0.01,
+                    act_dtype=jnp.bfloat16, compress_pod_grads: bool = False,
+                    pod_axis: str | None = None, ce_chunk: int = 512,
+                    scan_unroll: bool = False, remat_policy: str = "full"):
+    """Build the jit-able train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the per-device batch and accumulates gradients
+    sequentially (activation-memory control).  compress_pod_grads quantizes
+    the gradient to int8 for the cross-pod all-reduce (DCN) and dequantizes
+    after — see distributed/compression.py.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, aux_weight=aux_weight,
+                              act_dtype=act_dtype, ce_chunk=ce_chunk,
+                              scan_unroll=scan_unroll,
+                              remat_policy=remat_policy), has_aux=True
+        )(params)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                (loss_acc, grads_acc) = carry
+                (loss, aux), grads = grads_of(state.params, mb_i)
+                grads = jax.tree.map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads), aux
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss_sum, grads), auxs = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zero_grads), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            aux = jax.tree.map(lambda a: a[-1], auxs)
+        else:
+            (loss, aux), grads = grads_of(state.params, batch)
+
+        if compress_pod_grads and pod_axis is not None:
+            from repro.distributed.compression import compressed_psum_mean
+            grads = jax.tree.map(
+                functools.partial(compressed_psum_mean, axis=pod_axis), grads)
+
+        params, opt, om = O.apply(opt_cfg, state.opt, state.params, grads)
+        metrics = {"loss": loss, **aux, **om}
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,232 @@
+"""GRNND core behaviour tests: pools, rounds, build quality, search."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grnnd, pools, recall, rnnd_ref
+from repro.core.search import search, medoid
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def small_dataset():
+    x = synthetic.make_preset(jax.random.PRNGKey(0), "tiny", 1500)
+    q = synthetic.queries_from(jax.random.PRNGKey(1), x, 150)
+    gt = recall.brute_force_knn(x, q, 10)
+    return x, q, gt
+
+
+# ---------------------------------------------------------------------------
+# pools
+# ---------------------------------------------------------------------------
+
+class TestPools:
+    def test_empty_pool_sentinels(self):
+        p = pools.empty_pool(7, 5)
+        assert p.ids.shape == (7, 5)
+        assert bool(jnp.all(p.ids == -1))
+        assert bool(jnp.all(jnp.isinf(p.dists)))
+        assert bool(jnp.all(p.degree() == 0))
+
+    def test_init_random_no_self_edges(self):
+        x = synthetic.make_preset(jax.random.PRNGKey(3), "tiny", 256)
+        p = pools.init_random(jax.random.PRNGKey(4), x, s=8, r=16)
+        rows = jnp.arange(256)[:, None]
+        assert not bool(jnp.any(p.ids == rows))
+        # at least one neighbor each; dists are true squared distances
+        assert bool(jnp.all(p.degree() >= 1))
+        v, s0 = 5, 0
+        nid = int(p.ids[v, s0])
+        want = float(jnp.sum((x[v] - x[nid]) ** 2))
+        np.testing.assert_allclose(float(p.dists[v, s0]), want, rtol=1e-5)
+
+    def test_init_pool_sorted_ascending(self):
+        x = synthetic.make_preset(jax.random.PRNGKey(5), "tiny", 128)
+        p = pools.init_random(jax.random.PRNGKey(6), x, s=8, r=12)
+        d = np.asarray(p.dists)
+        d = np.where(np.isinf(d), 1e30, d)
+        assert np.all(np.diff(d, axis=1) >= -1e-7)
+
+    def test_group_requests_caps_and_orders(self):
+        req = pools.Requests(
+            dst=jnp.array([2, 2, 2, 0, -1, 2], jnp.int32),
+            src=jnp.array([5, 6, 7, 8, 9, 10], jnp.int32),
+            dist=jnp.array([3.0, 1.0, 2.0, 0.5, 0.1, 4.0]),
+        )
+        ids, dists = pools.group_requests(req, n=4, cap=2)
+        # dst=2 received 4 requests; the 2 closest survive, in ascending order
+        assert ids[2].tolist() == [6, 7]
+        np.testing.assert_allclose(dists[2], [1.0, 2.0])
+        assert ids[0].tolist() == [8, -1]
+        assert ids[1].tolist() == [-1, -1]
+        assert ids[3].tolist() == [-1, -1]
+
+    def test_group_requests_drops_self_inserts(self):
+        req = pools.Requests(
+            dst=jnp.array([1, 1], jnp.int32),
+            src=jnp.array([1, 2], jnp.int32),
+            dist=jnp.array([0.0, 1.0]),
+        )
+        ids, _ = pools.group_requests(req, n=3, cap=2)
+        assert ids[1].tolist() == [2, -1]
+
+    def test_insert_requests_respects_capacity_and_dedup(self):
+        p = pools.empty_pool(3, 2)
+        req = pools.Requests(
+            dst=jnp.array([0, 0, 0, 0], jnp.int32),
+            src=jnp.array([1, 2, 1, 2], jnp.int32),
+            dist=jnp.array([1.0, 2.0, 1.0, 2.0]),
+        )
+        p2 = pools.insert_requests(p, req)
+        assert p2.ids[0].tolist() == [1, 2]
+        # closer newcomer evicts the farthest
+        req2 = pools.Requests(
+            dst=jnp.array([0], jnp.int32), src=jnp.array([5], jnp.int32),
+            dist=jnp.array([0.5]))
+        p3 = pools.insert_requests(p2, req2)
+        assert p3.ids[0].tolist() == [5, 1]
+
+
+# ---------------------------------------------------------------------------
+# build invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(
+    n=st.sampled_from([128, 300]),
+    r=st.sampled_from([8, 16]),
+    order=st.sampled_from(["disordered", "ascending", "descending"]),
+    seed=st.integers(0, 1000),
+)
+def test_build_invariants(n, r, order, seed):
+    x = synthetic.vector_dataset(jax.random.PRNGKey(seed), n, 8, n_clusters=8)
+    cfg = grnnd.GRNNDConfig(s=min(8, r), r=r, t1=2, t2=2,
+                            pairs_per_vertex=8, order=order)
+    pool = grnnd.build_graph(jax.random.PRNGKey(seed + 1), x, cfg)
+    ids = np.asarray(pool.ids)
+    dists = np.asarray(pool.dists)
+    rows = np.arange(n)[:, None]
+    # no self edges
+    assert not np.any(ids == rows)
+    # ids in range
+    assert np.all(ids < n) and np.all(ids >= -1)
+    # per-row uniqueness of valid ids
+    for v in range(n):
+        valid = ids[v][ids[v] >= 0]
+        assert len(valid) == len(set(valid.tolist()))
+    # distances correct for valid entries, ascending order, inf for empties
+    d = np.where(np.isinf(dists), 1e30, dists)
+    assert np.all(np.diff(d, axis=1) >= -1e-6)
+    xs = np.asarray(x)
+    v = int(np.argmax((ids >= 0).sum(1)))
+    for slot in range(r):
+        if ids[v, slot] >= 0:
+            want = float(((xs[v] - xs[ids[v, slot]]) ** 2).sum())
+            np.testing.assert_allclose(dists[v, slot], want, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quality: parity with the sequential reference + round behaviour
+# ---------------------------------------------------------------------------
+
+class TestQuality:
+    def test_recall_beats_random_init(self, small_dataset):
+        x, q, gt = small_dataset
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16)
+        p0 = pools.init_random(jax.random.PRNGKey(7), x, 8, 16)
+        built = grnnd.build_graph(jax.random.PRNGKey(7), x, cfg)
+        r0 = recall.recall_at_k(search(x, p0.ids, q, k=10, ef=32).ids, gt)
+        r1 = recall.recall_at_k(search(x, built.ids, q, k=10, ef=32).ids, gt)
+        assert r1 > r0 + 0.2, (r0, r1)
+        assert r1 > 0.9
+
+    def test_parity_with_sequential_reference(self, small_dataset):
+        """GRNND (parallel, disordered) must match sequential RNN-Descent.
+
+        Per the paper's Fig-5 protocol, each method uses its own tuned
+        construction parameters: sequential immediate writes propagate
+        within a round, so the parallel snapshot-based rounds need more
+        iterations to reach the same quality (this is exactly the T1/T2
+        trade the paper studies in Fig 9).
+        """
+        x, q, gt = small_dataset
+        xs = np.asarray(x)
+        adj = rnnd_ref.build_graph_ref(xs, s=8, r=16, t1=2, t2=2, seed=0)
+        ref_ids = jnp.asarray(rnnd_ref.adjacency_to_pool_arrays(adj, 16))
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=4, pairs_per_vertex=32)
+        ours = grnnd.build_graph(jax.random.PRNGKey(8), x, cfg)
+        r_ref = recall.recall_at_k(search(x, ref_ids, q, k=10, ef=32).ids, gt)
+        r_ours = recall.recall_at_k(search(x, ours.ids, q, k=10, ef=32).ids, gt)
+        # parallel adaptation must be within a few points of the CPU oracle
+        assert r_ours >= r_ref - 0.05, (r_ref, r_ours)
+
+    def test_reverse_edges_increase_degree(self):
+        x = synthetic.make_preset(jax.random.PRNGKey(9), "tiny", 512)
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=1, t2=2, rho=0.6,
+                                pairs_per_vertex=8)
+        p = pools.init_random(jax.random.PRNGKey(10), x, 8, 16)
+        p = grnnd.update_round(x, p, jax.random.PRNGKey(11), cfg)
+        deg_before = float(jnp.mean(p.degree()))
+        p2 = grnnd.reverse_edge_round(p, cfg)
+        deg_after = float(jnp.mean(p2.degree()))
+        assert deg_after >= deg_before
+
+    def test_build_deterministic(self):
+        x = synthetic.make_preset(jax.random.PRNGKey(12), "tiny", 256)
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=2, pairs_per_vertex=8)
+        p1 = grnnd.build_graph(jax.random.PRNGKey(13), x, cfg)
+        p2 = grnnd.build_graph(jax.random.PRNGKey(13), x, cfg)
+        np.testing.assert_array_equal(p1.ids, p2.ids)
+
+    def test_chunked_build_matches_unchunked(self):
+        x = synthetic.make_preset(jax.random.PRNGKey(14), "tiny", 512)
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=2, pairs_per_vertex=8)
+        cfg_c = cfg._replace(chunk_size=128)
+        p1 = grnnd.build_graph(jax.random.PRNGKey(15), x, cfg)
+        p2 = grnnd.build_graph(jax.random.PRNGKey(15), x, cfg_c)
+        # chunking changes key->pair mapping, so graphs differ, but quality
+        # must match; degrees should be close
+        assert abs(float(jnp.mean(p1.degree())) -
+                   float(jnp.mean(p2.degree()))) < 2.0
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+class TestSearch:
+    def test_search_exact_on_full_graph(self):
+        """On a complete-ish graph, beam search == brute force."""
+        x = synthetic.make_preset(jax.random.PRNGKey(16), "tiny", 64)
+        d = recall.brute_force_knn(x, x, 33)  # 32 neighbors + self
+        graph = d[:, 1:]
+        q = synthetic.queries_from(jax.random.PRNGKey(17), x, 32)
+        gt = recall.brute_force_knn(x, q, 5)
+        res = search(x, graph, q, k=5, ef=32)
+        assert recall.recall_at_k(res.ids, gt) > 0.99
+
+    def test_search_results_sorted_and_valid(self, small_dataset):
+        x, q, gt = small_dataset
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=2, pairs_per_vertex=16)
+        pool = grnnd.build_graph(jax.random.PRNGKey(18), x, cfg)
+        res = search(x, pool.ids, q, k=10, ef=32)
+        d = np.asarray(res.dists)
+        assert np.all(np.diff(np.where(np.isinf(d), 1e30, d), axis=1) >= -1e-6)
+        assert np.all(np.asarray(res.ids) < x.shape[0])
+
+    def test_medoid_is_central(self):
+        x = jnp.concatenate([
+            jnp.zeros((5, 4)) + jnp.arange(5)[:, None] * 0.01,
+            jnp.ones((1, 4)) * 100.0,
+        ])
+        assert int(medoid(x)) < 5
+
+    def test_higher_ef_higher_recall(self, small_dataset):
+        x, q, gt = small_dataset
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16)
+        pool = grnnd.build_graph(jax.random.PRNGKey(19), x, cfg)
+        r_lo = recall.recall_at_k(search(x, pool.ids, q, k=10, ef=16).ids, gt)
+        r_hi = recall.recall_at_k(search(x, pool.ids, q, k=10, ef=96).ids, gt)
+        assert r_hi >= r_lo

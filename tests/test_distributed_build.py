@@ -1,0 +1,80 @@
+"""Distributed (shard_map) GRNND build: multi-device correctness.
+
+Runs on 8 forced host devices in a subprocess (device count must be set
+before jax initializes, so these tests shell out — the same pattern the
+dry-run uses).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.core import grnnd, recall, distributed
+    from repro.core.search import search
+    from repro.data import synthetic
+
+    key = jax.random.PRNGKey(0)
+    x = synthetic.make_preset(key, "tiny", 2048)
+    cfg = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16)
+    q = synthetic.queries_from(jax.random.PRNGKey(2), x, 200)
+    gt = recall.brute_force_knn(x, q, 10)
+
+    out = {}
+    mesh = jax.make_mesh((8,), ("data",))
+    for comm in ("allgather", "a2a"):
+        pool = distributed.sharded_build_graph(
+            mesh, ("data",), jax.random.PRNGKey(1), x, cfg, comm=comm)
+        ids = jax.device_get(pool.ids)
+        res = search(x, jnp.asarray(ids), q, k=10, ef=32)
+        out[comm] = recall.recall_at_k(res.ids, gt)
+
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    pool = distributed.sharded_build_graph(
+        mesh2, ("pod", "data"), jax.random.PRNGKey(1), x, cfg)
+    res = search(x, jnp.asarray(jax.device_get(pool.ids)), q, k=10, ef=32)
+    out["two_axis"] = recall.recall_at_k(res.ids, gt)
+
+    # single-device baseline with identical cfg/key for quality comparison
+    pool1 = grnnd.build_graph(jax.random.PRNGKey(1), x, cfg)
+    res1 = search(x, pool1.ids, q, k=10, ef=32)
+    out["single"] = recall.recall_at_k(res1.ids, gt)
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_allgather_build_quality(dist_results):
+    assert dist_results["allgather"] > 0.9
+
+
+def test_a2a_matches_allgather(dist_results):
+    assert abs(dist_results["a2a"] - dist_results["allgather"]) < 0.02
+
+
+def test_multi_axis_mesh_build(dist_results):
+    assert dist_results["two_axis"] > 0.9
+
+
+def test_sharded_parity_with_single_device(dist_results):
+    assert dist_results["allgather"] >= dist_results["single"] - 0.05

@@ -1,0 +1,98 @@
+"""Kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracles.
+
+Sweeps shapes and dtypes per the brief; hypothesis property tests cover the
+merge semantics (capacity, uniqueness, distance ordering).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas, rowwise_sqdist_pallas
+from repro.kernels.topr_merge import topr_merge_pallas
+
+
+@pytest.mark.parametrize("m,n,d", [
+    (4, 4, 8), (17, 33, 12), (128, 128, 128), (130, 70, 200),
+    (1, 256, 960), (64, 64, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_matches_ref(m, n, d, dtype):
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, d), dtype)
+    y = jax.random.normal(ky, (n, d), dtype)
+    got = pairwise_sqdist_pallas(x, y, bm=32, bn=32, bk=128, interpret=True)
+    want = ref.pairwise_sqdist_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("m,d", [(3, 5), (64, 128), (100, 960), (257, 31)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rowwise_matches_ref(m, d, dtype):
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (m, d), dtype)
+    y = jax.random.normal(ky, (m, d), dtype)
+    got = rowwise_sqdist_pallas(x, y, bm=32, bk=128, interpret=True)
+    want = ref.rowwise_sqdist_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+def test_pairwise_self_distance_zero():
+    x = jax.random.normal(jax.random.PRNGKey(2), (40, 64))
+    d = pairwise_sqdist_pallas(x, x, bm=16, bn=16, bk=64, interpret=True)
+    np.testing.assert_allclose(jnp.diag(d), np.zeros(40), atol=1e-4)
+
+
+@pytest.mark.parametrize("b,w,r", [(4, 16, 4), (10, 40, 8), (8, 130, 32), (1, 8, 8)])
+def test_topr_merge_matches_ref(b, w, r):
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    # ids with duplicates and empties
+    ids = jax.random.randint(k1, (b, w), -1, w // 2 + 2)
+    dists = jnp.abs(jax.random.normal(k2, (b, w)))
+    # the same id must carry the same distance (it is d(owner, id))
+    lut = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (w + 2,)))
+    dists = jnp.where(ids >= 0, lut[jnp.clip(ids, 0)], jnp.inf)
+    gi, gd = topr_merge_pallas(ids, dists, r, br=4, interpret=True)
+    wi, wd = ref.topr_merge_ref(ids, dists, r)
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_allclose(gd, wd, rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    b=st.integers(1, 6),
+    w=st.integers(1, 24),
+    r=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topr_merge_properties(b, w, r, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    ids = np.asarray(jax.random.randint(k1, (b, w), -1, 10))
+    lut = np.asarray(jnp.abs(jax.random.normal(k2, (12,))))
+    dists = np.where(ids >= 0, lut[np.clip(ids, 0, None)], np.inf)
+
+    oi, od = ref.topr_merge_ref(jnp.asarray(ids), jnp.asarray(dists), r)
+    oi, od = np.asarray(oi), np.asarray(od)
+
+    for row in range(b):
+        valid = oi[row][oi[row] >= 0]
+        # uniqueness
+        assert len(valid) == len(set(valid.tolist()))
+        # capacity
+        assert len(valid) <= r
+        # ascending distances among valid entries
+        dv = od[row][oi[row] >= 0]
+        assert np.all(np.diff(dv) >= -1e-7)
+        # completeness: nothing closer was left out
+        in_ids = set(i for i in ids[row].tolist() if i >= 0)
+        left_out = in_ids - set(valid.tolist())
+        if len(valid) == r and left_out:
+            worst_kept = dv.max() if len(dv) else np.inf
+            best_left = min(lut[i] for i in left_out)
+            assert best_left >= worst_kept - 1e-7

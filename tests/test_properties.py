@@ -1,0 +1,90 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grnnd, pools, recall
+from repro.core.search import search
+from repro.data import synthetic
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(2, 64),
+    cap=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_group_requests_invariants(m, n, cap, seed):
+    """Staging is always: in-range ids, per-row unique, ascending dists,
+    self-inserts dropped, at most cap entries."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    req = pools.Requests(
+        dst=jax.random.randint(k1, (m,), -1, n),
+        src=jax.random.randint(k2, (m,), 0, n),
+        dist=jnp.abs(jax.random.normal(k3, (m,))),
+    )
+    ids, dists = pools.group_requests(req, n, cap)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ids.shape == (n, cap)
+    for row in range(n):
+        valid = ids[row][ids[row] >= 0]
+        assert len(valid) == len(set(valid.tolist()))          # unique
+        assert row not in valid                                 # no self
+        dv = dists[row][ids[row] >= 0]
+        assert np.all(np.diff(dv) >= -1e-7)                     # ascending
+        assert np.all(valid < n)
+
+
+@settings(deadline=None, max_examples=6)
+@given(
+    n=st.sampled_from([64, 128]),
+    d=st.sampled_from([4, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_search_returns_true_distances(n, d, seed):
+    """Every (id, dist) the search returns must satisfy
+    dist == ||q - x[id]||^2 — no stale or fabricated entries."""
+    key = jax.random.PRNGKey(seed)
+    x = synthetic.vector_dataset(key, n, d, n_clusters=4)
+    cfg = grnnd.GRNNDConfig(s=8, r=12, t1=2, t2=2, pairs_per_vertex=8)
+    pool = grnnd.build_graph(jax.random.fold_in(key, 1), x, cfg)
+    q = synthetic.queries_from(jax.random.fold_in(key, 2), x, 8)
+    res = search(x, pool.ids, q, k=5, ef=16)
+    ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+    xs = np.asarray(x)
+    qs = np.asarray(q)
+    for qi in range(qs.shape[0]):
+        for slot in range(5):
+            if ids[qi, slot] < 0:
+                continue
+            want = float(((qs[qi] - xs[ids[qi, slot]]) ** 2).sum())
+            np.testing.assert_allclose(dists[qi, slot], want, rtol=1e-4,
+                                       atol=1e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 1000), rho=st.floats(0.1, 1.0))
+def test_reverse_edges_preserve_invariants(seed, rho):
+    key = jax.random.PRNGKey(seed)
+    x = synthetic.vector_dataset(key, 96, 8, n_clusters=4)
+    cfg = grnnd.GRNNDConfig(s=8, r=12, t1=1, t2=1, rho=rho,
+                            pairs_per_vertex=8)
+    p = pools.init_random(jax.random.fold_in(key, 1), x, 8, 12)
+    p2 = grnnd.reverse_edge_round(p, cfg)
+    ids = np.asarray(p2.ids)
+    rows = np.arange(96)[:, None]
+    assert not np.any(ids == rows)
+    for v in range(96):
+        valid = ids[v][ids[v] >= 0]
+        assert len(valid) == len(set(valid.tolist()))
+
+
+def test_merge_idempotent():
+    """Merging a pool with itself must be the identity."""
+    x = synthetic.vector_dataset(jax.random.PRNGKey(0), 64, 8)
+    p = pools.init_random(jax.random.PRNGKey(1), x, 8, 12)
+    p2 = pools.merge_into(p, p.ids, p.dists)
+    np.testing.assert_array_equal(np.asarray(p.ids), np.asarray(p2.ids))
