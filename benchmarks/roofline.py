@@ -107,8 +107,60 @@ def analyze(results_dir: str = "results/dryrun_final", mesh: str = "single"):
     return rows
 
 
-def run() -> list[str]:
+def grnnd_round_model(d: int, n: int = 1_000_000, r: int = 32,
+                      p: int = 32) -> dict:
+    """Analytic roofline terms for ONE propagation round, fused vs unfused.
+
+    Unfused (the pre-fusion XLA pipeline, EXPERIMENTS.md §Perf cell C):
+    the two (N·P, D) neighbor-vector gathers are materialized in HBM —
+    2·N·P·D reads out of x, 2·N·P·D writes, then 2·N·P·D re-reads by
+    rowwise_sqdist: ~24·N·P·D bytes of fp32 traffic.
+
+    Fused (kernels/rng_round.py): each pool vector is DMA'd into VMEM once
+    per vertex regardless of how many sampled pairs touch it — N·R·D reads
+    — and all pair math stays on-chip; only the (P,)/(R,) request/kill
+    outputs return to HBM.
+
+    FLOPs term: the diff-square-reduce pair math (3·N·P·D) plus the two
+    one-hot selection matmuls the fused kernel feeds the MXU (4·N·P·R·D).
+    """
+    small_io = n * (2 * r + 2 * p + 3 * p + r) * 4     # pools, samples, outs
+    fused_bytes = n * r * d * 4 + small_io
+    unfused_bytes = 6 * n * p * d * 4 + small_io
+    flops = 3.0 * n * p * d + 4.0 * n * p * r * d
+    t_mem_fused = fused_bytes / HBM_BW
+    t_mem_unfused = unfused_bytes / HBM_BW
+    t_comp = flops / PEAK_FLOPS_BF16
+    return {
+        "t_compute_s": t_comp,
+        "t_mem_fused_s": t_mem_fused,
+        "t_mem_unfused_s": t_mem_unfused,
+        "traffic_cut": unfused_bytes / fused_bytes,
+        "bound_fused_s": max(t_comp, t_mem_fused),
+        "bound_unfused_s": max(t_comp, t_mem_unfused),
+        "dominant": "compute" if t_comp > t_mem_fused else "memory",
+    }
+
+
+def grnnd_round_rows() -> list[str]:
+    """Fused-round speedup rows (recorded alongside the dry-run cells)."""
     out = []
+    for shape, d in (("build_1m_d128", 128), ("build_1m_d960", 960)):
+        m = grnnd_round_model(d)
+        derived = (f"dom={m['dominant']}"
+                   f" comp={m['t_compute_s']*1e3:.2f}ms"
+                   f" mem={m['t_mem_fused_s']*1e3:.2f}ms"
+                   f" mem_unfused={m['t_mem_unfused_s']*1e3:.2f}ms"
+                   f" traffic_cut={m['traffic_cut']:.1f}x"
+                   f" round_speedup={m['bound_unfused_s']/m['bound_fused_s']:.1f}x")
+        out.append(
+            f"roofline/grnnd-round-fused/{shape},"
+            f"{m['bound_fused_s']*1e6:.1f},{derived}")
+    return out
+
+
+def run() -> list[str]:
+    out = grnnd_round_rows()
     for r in analyze():
         name = f"roofline/{r['arch']}/{r['shape']}"
         if r["status"] != "ok":

@@ -1,0 +1,39 @@
+"""Compatibility shims for jax API drift across the versions we support.
+
+`jax.shard_map` (with the `check_vma` kwarg) replaced
+`jax.experimental.shard_map.shard_map` (with `check_rep`) in newer jax;
+this container pins an older jax, so call sites import `shard_map` from
+here and always pass `check_vma=` — the shim renames the kwarg when
+running on the experimental API.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax <= 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    kwargs = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across the (sizes, names) -> shape_tuple signature change."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a per-program list on older jax."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

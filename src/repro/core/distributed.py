@@ -27,7 +27,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core import pools as P
 from repro.core.grnnd import (

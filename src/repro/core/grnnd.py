@@ -54,45 +54,39 @@ class GRNNDConfig(NamedTuple):
 # Disordered propagation round (Alg. 4)
 # ---------------------------------------------------------------------------
 
-def _pair_requests_chunk(x, ids_c, dists_c, rows_c, key, cfg: GRNNDConfig):
-    """Evaluate random candidate pairs for a chunk of vertices.
-
-    Returns (redirect Requests, kill mask (C, R) bool).
-    """
-    c, r = ids_c.shape
-    p = cfg.pairs_per_vertex
+def _sample_slot_pairs(key, c, r, p):
+    """The shared pair sampling: drawn outside the kernel so every backend
+    (pallas / interpret / ref) evaluates the identical pairs."""
     ki, kj = jax.random.split(key)
     si = jax.random.randint(ki, (c, p), 0, r, jnp.int32)
     sj = jax.random.randint(kj, (c, p), 0, r, jnp.int32)
+    return si, sj
 
-    ni = jnp.take_along_axis(ids_c, si, axis=1)
-    nj = jnp.take_along_axis(ids_c, sj, axis=1)
-    dvi = jnp.take_along_axis(dists_c, si, axis=1)
-    dvj = jnp.take_along_axis(dists_c, sj, axis=1)
-    valid = (ni >= 0) & (nj >= 0) & (ni != nj)
 
-    xi = x[jnp.clip(ni, 0).reshape(-1)]
-    xj = x[jnp.clip(nj, 0).reshape(-1)]
-    dij = ops.rowwise_sqdist(xi, xj).reshape(c, p)
+def _pair_matrices_chunk(x, ids_c, dists_c, key, cfg: GRNNDConfig):
+    """Fused pair evaluation for a chunk: (dst, src, dij) (C, P) + kill (C, R).
 
-    # RNG criterion (paper eq. 2)
-    hit = valid & (dij < jnp.maximum(dvi, dvj))
+    The gather -> rowwise_sqdist -> scatter pipeline this used to lower to
+    is now one fused op (kernels/rng_round.py): neighbor vectors are pulled
+    into VMEM once per vertex, pair distances and the RNG criterion (paper
+    eq. 2) are evaluated in-register, and the redirect requests plus kill
+    mask come out in a single pass.
+    """
+    c, r = ids_c.shape
+    si, sj = _sample_slot_pairs(key, c, r, cfg.pairs_per_vertex)
+    return ops.rng_propagation_round(x, ids_c, dists_c, si, sj)
 
-    i_is_far = dvi > dvj
-    far = jnp.where(i_is_far, ni, nj)
-    close = jnp.where(i_is_far, nj, ni)
-    far_slot = jnp.where(i_is_far, si, sj)
 
+def _pair_requests_chunk(x, ids_c, dists_c, rows_c, key, cfg: GRNNDConfig):
+    """Request-tuple adapter over the fused round (distributed build entry).
+
+    Returns (redirect Requests, kill mask (C, R) bool).
+    """
+    del rows_c
+    dst, src, dij, killed = _pair_matrices_chunk(x, ids_c, dists_c, key, cfg)
     redirect = P.Requests(
-        dst=jnp.where(hit, close, -1).reshape(-1),
-        src=far.reshape(-1),
-        dist=dij.reshape(-1),
-    )
-
-    killed = jnp.zeros((c, r), jnp.int32)
-    rows = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[:, None], (c, p))
-    killed = killed.at[rows, far_slot].max(hit.astype(jnp.int32))
-    return redirect, killed.astype(bool)
+        dst=dst.reshape(-1), src=src.reshape(-1), dist=dij.reshape(-1))
+    return redirect, killed
 
 
 # ---------------------------------------------------------------------------
@@ -165,33 +159,52 @@ def _sorted_requests_chunk(x, ids_c, dists_c, rows_c, key, cfg: GRNNDConfig):
 # One inner round: requests -> fresh write buffer -> swap
 # ---------------------------------------------------------------------------
 
-def _round_requests(x, pool: P.Pool, key, cfg: GRNNDConfig):
-    """Returns (redirect Requests, killed (N, R) mask)."""
+def _chunked(pool: P.Pool, key, cfg: GRNNDConfig):
+    """Yield the (ids, dists, key) chunking plan, or None for one-shot."""
     n, r = pool.ids.shape
-    fn = _pair_requests_chunk if cfg.order == "disordered" else _sorted_requests_chunk
-
     chunk = cfg.chunk_size
     if chunk is None or n % chunk != 0 or chunk >= n:
+        return None
+    n_chunks = n // chunk
+    return (pool.ids.reshape(n_chunks, chunk, r),
+            pool.dists.reshape(n_chunks, chunk, r),
+            jax.random.split(key, n_chunks))
+
+
+def _round_pair_matrices(x, pool: P.Pool, key, cfg: GRNNDConfig):
+    """Disordered round over all vertices: fused (N, P) matrices + kill."""
+    n, r = pool.ids.shape
+    plan = _chunked(pool, key, cfg)
+    if plan is None:
+        return _pair_matrices_chunk(x, pool.ids, pool.dists, key, cfg)
+
+    ids_ch, dists_ch, keys = plan
+    dst, src, dij, killed = jax.lax.map(
+        lambda a: _pair_matrices_chunk(x, a[0], a[1], a[2], cfg),
+        (ids_ch, dists_ch, keys))
+    p = dst.shape[-1]
+    return (dst.reshape(n, p), src.reshape(n, p), dij.reshape(n, p),
+            killed.reshape(n, r))
+
+
+def _round_requests(x, pool: P.Pool, key, cfg: GRNNDConfig):
+    """Sorted-order round (ascending/descending ablation): flat Requests."""
+    n, r = pool.ids.shape
+    plan = _chunked(pool, key, cfg)
+    if plan is None:
         rows = jnp.arange(n, dtype=jnp.int32)
-        redirect, killed = fn(x, pool.ids, pool.dists, rows, key, cfg)
-    else:
-        n_chunks = n // chunk
-        keys = jax.random.split(key, n_chunks)
-        ids_ch = pool.ids.reshape(n_chunks, chunk, r)
-        dists_ch = pool.dists.reshape(n_chunks, chunk, r)
-        rows_ch = jnp.arange(n, dtype=jnp.int32).reshape(n_chunks, chunk)
+        return _sorted_requests_chunk(x, pool.ids, pool.dists, rows, key, cfg)
 
-        def body(args):
-            ids_c, dists_c, rows_c, k = args
-            red, kill = fn(x, ids_c, dists_c, rows_c, k, cfg)
-            return red, kill
-
-        red, killed = jax.lax.map(body, (ids_ch, dists_ch, rows_ch, keys))
-        redirect = P.Requests(
-            dst=red.dst.reshape(-1), src=red.src.reshape(-1),
-            dist=red.dist.reshape(-1))
-        killed = killed.reshape(n, r)
-    return redirect, killed
+    ids_ch, dists_ch, keys = plan
+    chunk = ids_ch.shape[1]
+    rows_ch = jnp.arange(n, dtype=jnp.int32).reshape(-1, chunk)
+    red, killed = jax.lax.map(
+        lambda a: _sorted_requests_chunk(x, a[0], a[1], a[2], a[3], cfg),
+        (ids_ch, dists_ch, rows_ch, keys))
+    redirect = P.Requests(
+        dst=red.dst.reshape(-1), src=red.src.reshape(-1),
+        dist=red.dist.reshape(-1))
+    return redirect, killed.reshape(n, r)
 
 
 def update_round(x, pool: P.Pool, key, cfg: GRNNDConfig) -> P.Pool:
@@ -201,12 +214,20 @@ def update_round(x, pool: P.Pool, key, cfg: GRNNDConfig) -> P.Pool:
     11-15) are already per-vertex aligned, so they bypass the request
     sort/scatter entirely — only cross-vertex redirects are grouped.  The
     merged result is the identical top-R of the same union.
+
+    The disordered path consumes the fused kernel's (N, P) matrices
+    directly (pools.stage_request_matrix) — no flat (N·P,) Requests
+    intermediate; the sorted ablations keep the Requests-tuple path.
     """
     n, r = pool.ids.shape
-    redirect, killed = _round_requests(x, pool, key, cfg)
+    if cfg.order == "disordered":
+        dst, src, dij, killed = _round_pair_matrices(x, pool, key, cfg)
+        staged_i, staged_d = P.stage_request_matrix(dst, src, dij, n, cfg.cap)
+    else:
+        redirect, killed = _round_requests(x, pool, key, cfg)
+        staged_i, staged_d = P.group_requests(redirect, n, cfg.cap)
     surv_ids = jnp.where(killed, -1, pool.ids)
     surv_dists = jnp.where(killed, jnp.inf, pool.dists)
-    staged_i, staged_d = P.group_requests(redirect, n, cfg.cap)
     return P.merge_into(P.Pool(surv_ids, surv_dists), staged_i, staged_d)
 
 
@@ -240,10 +261,16 @@ def reverse_edge_round(pool: P.Pool, cfg: GRNNDConfig, rho=None) -> P.Pool:
 # Full build (Alg. 3)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
 def _build_graph_impl(key: jax.Array, x: jnp.ndarray, cfg: GRNNDConfig,
-                      t1, t2, rho) -> P.Pool:
-    """t1/t2/rho are traced: hyperparameter sweeps share one compilation."""
+                      t1, t2, rho, backend: str = "auto") -> P.Pool:
+    """t1/t2/rho are traced: hyperparameter sweeps share one compilation.
+
+    `backend` is unused in the body but part of the jit key: the kernels
+    dispatch on the global ops backend at TRACE time, so without it a
+    cached executable from one backend would silently serve another.
+    """
+    del backend
     k_init, k_rounds = jax.random.split(key)
     pool = P.init_random(k_init, x, cfg.s, cfg.r)
 
@@ -270,7 +297,8 @@ def build_graph(key: jax.Array, x: jnp.ndarray, cfg: GRNNDConfig) -> P.Pool:
     static_cfg = cfg._replace(t1=-1, t2=-1, rho=-1.0)  # normalize jit key
     return _build_graph_impl(key, x, static_cfg,
                              jnp.int32(cfg.t1), jnp.int32(cfg.t2),
-                             jnp.float32(cfg.rho))
+                             jnp.float32(cfg.rho),
+                             backend=ops.effective_backend())
 
 
 def build_graph_with_stats(key, x, cfg: GRNNDConfig):

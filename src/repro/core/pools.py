@@ -99,6 +99,24 @@ def concat_requests(*reqs: Requests) -> Requests:
 
 
 def group_requests(req: Requests, n: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage a flat Requests batch into per-destination buffers."""
+    return _stage(req.dst, req.src, req.dist, n, cap)
+
+
+def stage_request_matrix(
+    dst: jnp.ndarray, src: jnp.ndarray, dist: jnp.ndarray, n: int, cap: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage the fused round's (N, P) request matrices: -> ids/dists (N, cap).
+
+    This is the direct consumer of `ops.rng_propagation_round` output —
+    the row-major flatten below is a metadata-only reshape, so no (N·P,)
+    request copies (and no Requests tuple) are materialized between the
+    kernel and the sort/scatter staging pipeline.
+    """
+    return _stage(dst.reshape(-1), src.reshape(-1), dist.reshape(-1), n, cap)
+
+
+def _stage(dst, src_in, dist_in, n: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Stage requests into per-destination buffers: -> ids/dists (N, cap).
 
     Deterministic replacement for atomic concurrent insertion: requests are
@@ -106,22 +124,22 @@ def group_requests(req: Requests, n: int, cap: int) -> tuple[jnp.ndarray, jnp.nd
     destination segment, and the first `cap` per destination scattered.
     Self-inserts (dst == src) and inactive requests are dropped.
     """
-    dst = jnp.where(req.dst == req.src, -1, req.dst)
+    dst = jnp.where(dst == src_in, -1, dst)
 
     # dedup identical (dst, src) requests so duplicates cannot crowd out
     # distinct candidates at the capacity rank below: sort src-minor /
     # dst-major, invalidate repeats.
-    o1 = jnp.argsort(req.src, stable=True)
+    o1 = jnp.argsort(src_in, stable=True)
     o2 = jnp.argsort(jnp.where(dst >= 0, dst, n)[o1], stable=True)
     dperm = o1[o2]
-    dst_p, src_p = dst[dperm], req.src[dperm]
+    dst_p, src_p = dst[dperm], src_in[dperm]
     dup = jnp.concatenate([
         jnp.array([False]),
         (dst_p[1:] == dst_p[:-1]) & (src_p[1:] == src_p[:-1]) & (dst_p[1:] >= 0),
     ])
     dst = dst.at[dperm].set(jnp.where(dup, -1, dst_p))
 
-    dist = jnp.where(dst >= 0, req.dist, jnp.inf)
+    dist = jnp.where(dst >= 0, dist_in, jnp.inf)
     dst_key = jnp.where(dst >= 0, dst, n)  # inactive sorts to the end
 
     # stable composed sort: dist-minor then dst-major
@@ -131,7 +149,7 @@ def group_requests(req: Requests, n: int, cap: int) -> tuple[jnp.ndarray, jnp.nd
     perm = order1[order2]
 
     dst_s = dst_key[perm]
-    src_s = req.src[perm]
+    src_s = src_in[perm]
     dist_s = dist[perm]
 
     m = dst_s.shape[0]

@@ -1,30 +1,46 @@
 """Dispatching wrappers for the Pallas kernels.
 
 Backend policy:
-  * "pallas"    — real pl.pallas_call lowering (TPU).
+  * "pallas"    — real pl.pallas_call lowering on TPU.  Off-TPU (CPU CI,
+                  local debugging) it degrades to interpret mode so the
+                  same code path still runs end-to-end.
   * "interpret" — pallas_call(interpret=True): executes the kernel body in
                   Python; used by tests on this CPU container to validate the
                   kernels against the ref.py oracles.
   * "ref"       — pure-jnp oracle; the fast path on CPU (XLA:CPU) and the
-                  numerical ground truth.
+                  numerical ground truth.  "xla" is accepted as an alias.
   * "auto"      — pallas on TPU, ref elsewhere.
+
+Selection: `set_backend()` at runtime, or the REPRO_KERNEL_BACKEND
+environment variable at import time (see README.md §Backend selection).
 """
 from __future__ import annotations
+
+import contextlib
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas, rowwise_sqdist_pallas
+from repro.kernels.rng_round import rng_round_pallas
 from repro.kernels.topr_merge import topr_merge_pallas
 
-_BACKEND = "auto"
+_VALID = ("auto", "pallas", "interpret", "ref", "xla")
+
+
+def _normalize(backend: str) -> str:
+    assert backend in _VALID, f"backend must be one of {_VALID}, got {backend!r}"
+    return "ref" if backend == "xla" else backend
+
+
+_BACKEND = _normalize(os.environ.get("REPRO_KERNEL_BACKEND", "auto"))
 
 
 def set_backend(backend: str) -> None:
     global _BACKEND
-    assert backend in ("auto", "pallas", "interpret", "ref")
-    _BACKEND = backend
+    _BACKEND = _normalize(backend)
 
 
 def get_backend() -> str:
@@ -33,25 +49,60 @@ def get_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+@contextlib.contextmanager
+def backend(name: str):
+    """Scoped backend override (restores the previous selection on exit)."""
+    global _BACKEND
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _BACKEND = prev
+
+
+def effective_backend() -> str:
+    """The backend that will actually execute: real lowering only on TPU;
+    "pallas" elsewhere falls back to interpret so CPU CI exercises the
+    identical kernel bodies."""
+    b = get_backend()
+    if b == "pallas" and jax.default_backend() != "tpu":
+        return "interpret"
+    return b
+
+
+def _interpret() -> bool:
+    return effective_backend() == "interpret"
+
+
 def pairwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """(M,D) x (N,D) -> (M,N) squared L2, fp32."""
-    backend = get_backend()
-    if backend == "ref":
+    if get_backend() == "ref":
         return _ref.pairwise_sqdist_ref(x, y)
-    return pairwise_sqdist_pallas(x, y, interpret=(backend == "interpret"))
+    return pairwise_sqdist_pallas(x, y, interpret=_interpret())
 
 
 def rowwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """(M,D) x (M,D) -> (M,) squared L2 of corresponding rows, fp32."""
-    backend = get_backend()
-    if backend == "ref":
+    if get_backend() == "ref":
         return _ref.rowwise_sqdist_ref(x, y)
-    return rowwise_sqdist_pallas(x, y, interpret=(backend == "interpret"))
+    return rowwise_sqdist_pallas(x, y, interpret=_interpret())
 
 
 def topr_merge(ids: jnp.ndarray, dists: jnp.ndarray, r: int):
     """(B,W) candidate rows -> (B,r) closest unique entries. See ref.topr_merge_ref."""
-    backend = get_backend()
-    if backend == "ref":
+    if get_backend() == "ref":
         return _ref.topr_merge_ref(ids, dists, r)
-    return topr_merge_pallas(ids, dists, r, interpret=(backend == "interpret"))
+    return topr_merge_pallas(ids, dists, r, interpret=_interpret())
+
+
+def rng_propagation_round(x, ids, dists, si, sj):
+    """Fused disordered propagation round: (dst, src, dij, kill).
+
+    See ref.rng_round_ref for semantics; the pallas path fuses the
+    neighbor-vector gather, pair distances, RNG criterion, and kill-mask
+    emission into one VMEM-resident pass (kernels/rng_round.py).
+    """
+    if get_backend() == "ref":
+        return _ref.rng_round_ref(x, ids, dists, si, sj)
+    return rng_round_pallas(x, ids, dists, si, sj, interpret=_interpret())

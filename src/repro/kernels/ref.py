@@ -13,6 +13,7 @@ __all__ = [
     "pairwise_sqdist_ref",
     "rowwise_sqdist_ref",
     "topr_merge_ref",
+    "rng_round_ref",
 ]
 
 
@@ -35,6 +36,55 @@ def rowwise_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """Squared L2 distance between corresponding rows of x and y: (M,D)x(M,D)->(M,)."""
     d = x.astype(jnp.float32) - y.astype(jnp.float32)
     return jnp.sum(d * d, axis=-1)
+
+
+def rng_round_ref(
+    x: jnp.ndarray,
+    ids: jnp.ndarray,
+    dists: jnp.ndarray,
+    si: jnp.ndarray,
+    sj: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One disordered RNG propagation round (GRNND Alg. 4 lines 4-10).
+
+    Args:
+      x:     (N, D) dataset.
+      ids:   (C, R) int32 pool ids; -1 marks an empty slot.
+      dists: (C, R) float32 distances to the owning vertex; +inf for empty.
+      si/sj: (C, P) int32 sampled slot indices in [0, R) — drawn by the
+             caller so every backend evaluates the identical pairs.
+
+    Returns (dst (C,P) i32, src (C,P) i32, dij (C,P) f32, kill (C,R) bool).
+    For each sampled pair that is valid (both slots occupied, distinct
+    neighbors) and passes the RNG criterion d(n_i, n_j) < max(d(v, n_i),
+    d(v, n_j)), the farther endpoint `src` is redirected into the closer
+    endpoint `dst`'s pool and the farther endpoint's slot is killed;
+    missed pairs carry dst = -1.
+    """
+    c, r = ids.shape
+    p = si.shape[1]
+    ni = jnp.take_along_axis(ids, si, axis=1)
+    nj = jnp.take_along_axis(ids, sj, axis=1)
+    dvi = jnp.take_along_axis(dists, si, axis=1)
+    dvj = jnp.take_along_axis(dists, sj, axis=1)
+    valid = (ni >= 0) & (nj >= 0) & (ni != nj)
+
+    xi = x[jnp.clip(ni, 0).reshape(-1)].astype(jnp.float32)
+    xj = x[jnp.clip(nj, 0).reshape(-1)].astype(jnp.float32)
+    diff = xi - xj
+    dij = jnp.sum(diff * diff, axis=-1).reshape(c, p)
+
+    hit = valid & (dij < jnp.maximum(dvi, dvj))  # RNG criterion (eq. 2)
+    i_is_far = dvi > dvj
+    far = jnp.where(i_is_far, ni, nj)
+    close = jnp.where(i_is_far, nj, ni)
+    far_slot = jnp.where(i_is_far, si, sj)
+
+    dst = jnp.where(hit, close, -1)
+    kill = jnp.zeros((c, r), jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[:, None], (c, p))
+    kill = kill.at[rows, far_slot].max(hit.astype(jnp.int32))
+    return dst, far, dij, kill.astype(bool)
 
 
 def topr_merge_ref(

@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: fused RNG propagation round (GRNND Alg. 4 inner loop).
+
+One disordered propagation round previously lowered to a chain of separate
+XLA ops: two `take_along_axis` gathers of pool slots, a materialized
+(N·P, D) double gather of neighbor vectors, a `rowwise_sqdist` call, and
+two scatters for the kill mask — every intermediate written to and re-read
+from HBM, leaving the hot inner round memory-bound (EXPERIMENTS.md §Perf,
+cell C and cell F).
+
+This kernel fuses the whole pair-evaluation round.  Per vertex, it
+
+  1. gathers the pool's R neighbor vectors ONCE into a VMEM scratch via
+     index-dependent BlockSpecs over scalar-prefetched pool ids (the same
+     DMA-gather idiom as `gather_l2.py` — grid (N, R), one row per step);
+  2. at the last row of each vertex, evaluates all P sampled slot pairs
+     in-register: one-hot slot selection (exact — exactly one hot per
+     row, so the f32 matmul is a lossless gather), a (P, D) paired
+     squared distance on the MXU/VPU, and the RNG criterion
+     d(n_i, n_j) < max(d(v, n_i), d(v, n_j)) (paper eq. 2);
+  3. emits the redirect requests (dst = closer endpoint, src = farther
+     endpoint, the pair distance) and the per-slot kill mask in one pass.
+
+The (N·P, D) gathered-vector intermediates never exist: HBM traffic per
+vertex drops from ~2·P·D reads + 2·P·D writes + 2·P·D re-reads to R·D
+reads (pool vectors, each fetched once regardless of how many sampled
+pairs touch it) + the small (P,)/(R,) outputs.  See DESIGN.md §3 for
+the full memory-layout discussion.
+
+Semantics match `ref.rng_round_ref` bitwise under a common jit context
+(the parity tests assert identical kill masks, redirects, and merged
+pools): the slot samples si/sj are drawn OUTSIDE the kernel with the
+usual jax PRNG so every backend sees the same pairs, the one-hot slot
+selection is a lossless gather, and the distance math follows the same
+subtract-square-reduce order as `rowwise_sqdist_ref`.
+
+TPU notes: D is zero-padded to the 128-lane width (zero columns do not
+change distances); R and P are small (8-64) so the per-pair arrays ride
+in single vregs.  Validated under interpret=True on CPU
+(tests/test_rng_round.py); real-TPU lowering uses the same code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rng_round_kernel(ids_pref, xrow_ref, ids_ref, dists_ref, si_ref, sj_ref,
+                      dst_ref, src_ref, dij_ref, kill_ref, vecs_ref,
+                      *, r: int, p: int):
+    """Grid: (N, R). Step (v, rr) DMAs x[ids[v, rr]] into vecs row rr; the
+    pair evaluation runs once per vertex on the final row."""
+    del ids_pref  # consumed by the index_maps
+    rr = pl.program_id(1)
+    vecs_ref[pl.ds(rr, 1), :] = xrow_ref[...].astype(jnp.float32)
+
+    @pl.when(rr == r - 1)
+    def _evaluate():
+        vecs = vecs_ref[...]                              # (R, D) f32, VMEM
+        ids_row = ids_ref[...]                            # (1, R) int32
+        d_row = dists_ref[...]                            # (1, R) f32
+        # (1, P) -> (P, 1): row-major reshape, no data movement
+        si = si_ref[...].reshape(p, 1)
+        sj = sj_ref[...].reshape(p, 1)
+
+        slot = jax.lax.broadcasted_iota(jnp.int32, (p, r), 1)
+        oi = si == slot                                   # (P, R) one-hot
+        oj = sj == slot
+
+        ids_b = jnp.broadcast_to(ids_row, (p, r))
+        d_b = jnp.broadcast_to(d_row, (p, r))
+        # exactly one hot per row -> the masked sums are exact selections
+        # (where, not multiply: empty slots hold inf and 0*inf = nan)
+        ni = jnp.sum(jnp.where(oi, ids_b, 0), axis=1, keepdims=True)
+        nj = jnp.sum(jnp.where(oj, ids_b, 0), axis=1, keepdims=True)
+        dvi = jnp.sum(jnp.where(oi, d_b, 0.0), axis=1, keepdims=True)
+        dvj = jnp.sum(jnp.where(oj, d_b, 0.0), axis=1, keepdims=True)
+
+        mm = functools.partial(
+            jax.lax.dot_general,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        xi = mm(oi.astype(jnp.float32), vecs)             # (P, D) exact gather
+        xj = mm(oj.astype(jnp.float32), vecs)
+        diff = xi - xj
+        dij = jnp.sum(diff * diff, axis=1, keepdims=True)  # (P, 1)
+
+        valid = (ni >= 0) & (nj >= 0) & (ni != nj)
+        hit = valid & (dij < jnp.maximum(dvi, dvj))        # RNG criterion
+        i_is_far = dvi > dvj
+        far = jnp.where(i_is_far, ni, nj)
+        close = jnp.where(i_is_far, nj, ni)
+        far_slot = jnp.where(i_is_far, si, sj)             # (P, 1)
+
+        dst_ref[...] = jnp.where(hit, close, -1).reshape(1, p)
+        src_ref[...] = far.reshape(1, p)
+        dij_ref[...] = dij.reshape(1, p)
+        # kill[rr] = any sampled hit whose farther endpoint sits in slot rr
+        o_far = (far_slot == slot) & hit                   # (P, R)
+        kill_ref[...] = jnp.max(o_far.astype(jnp.int32), axis=0,
+                                keepdims=True)             # (1, R)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rng_round_pallas(
+    x: jnp.ndarray,
+    ids: jnp.ndarray,
+    dists: jnp.ndarray,
+    si: jnp.ndarray,
+    sj: jnp.ndarray,
+    *,
+    interpret: bool = False,
+):
+    """Fused propagation round over a (C, R) pool chunk.
+
+    Args:
+      x:     (N, D) dataset (stays in HBM; rows are DMA'd on demand).
+      ids:   (C, R) int32 pool ids, -1 = empty slot.
+      dists: (C, R) f32 owner distances, +inf = empty.
+      si/sj: (C, P) int32 sampled slot indices in [0, R).
+
+    Returns (dst (C,P) i32, src (C,P) i32, dij (C,P) f32, kill (C,R) bool):
+    the redirect requests (dst = -1 where the pair missed) and the slot
+    kill mask — identical to `ref.rng_round_ref`.
+    """
+    c, r = ids.shape
+    n, d = x.shape
+    p = si.shape[1]
+    ids_safe = jnp.clip(ids.astype(jnp.int32), 0, n - 1)
+
+    # Lane-align D for the real TPU lowering only: the zero columns keep
+    # distances mathematically unchanged but alter the fp32 reduction tree
+    # (~1e-7 relative), so interpret mode — the bitwise-parity harness —
+    # skips the pad.
+    pad_d = 0 if interpret else (-d) % 128
+    xp = jnp.pad(x, ((0, 0), (0, pad_d))) if pad_d else x
+    dp = d + pad_d
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,               # ids_safe lands as index operand
+        grid=(c, r),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda v, rr, ids_ref: (ids_ref[v, rr], 0)),
+            pl.BlockSpec((1, r), lambda v, rr, ids_ref: (v, 0)),
+            pl.BlockSpec((1, r), lambda v, rr, ids_ref: (v, 0)),
+            pl.BlockSpec((1, p), lambda v, rr, ids_ref: (v, 0)),
+            pl.BlockSpec((1, p), lambda v, rr, ids_ref: (v, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p), lambda v, rr, ids_ref: (v, 0)),
+            pl.BlockSpec((1, p), lambda v, rr, ids_ref: (v, 0)),
+            pl.BlockSpec((1, p), lambda v, rr, ids_ref: (v, 0)),
+            pl.BlockSpec((1, r), lambda v, rr, ids_ref: (v, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((r, dp), jnp.float32)],
+    )
+    dst, src, dij, kill = pl.pallas_call(
+        functools.partial(_rng_round_kernel, r=r, p=p),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((c, p), jnp.int32),
+            jax.ShapeDtypeStruct((c, p), jnp.int32),
+            jax.ShapeDtypeStruct((c, p), jnp.float32),
+            jax.ShapeDtypeStruct((c, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids_safe, xp, ids.astype(jnp.int32), dists.astype(jnp.float32),
+      si.astype(jnp.int32), sj.astype(jnp.int32))
+    return dst, src, dij, kill.astype(bool)

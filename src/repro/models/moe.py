@@ -112,7 +112,8 @@ def _moe_block_ep(params, cfg: ArchConfig, x: jnp.ndarray, hints):
     distributed build (DESIGN.md §4.3).
     """
     from jax.sharding import PartitionSpec as PSpec
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     b, s, d = x.shape
     e = cfg.n_experts

@@ -1,0 +1,33 @@
+"""Shared test helpers."""
+import pytest
+
+
+def optional_hypothesis():
+    """(given, settings, st) — real hypothesis if installed, else stand-ins
+    that mark the decorated tests as skipped.
+
+    hypothesis is a dev-only dependency (requirements-dev.txt); mixed test
+    modules use this so their non-property tests still run without it
+    (a module-level importorskip would skip the whole file).
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ModuleNotFoundError:
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            def deco(f):
+                @pytest.mark.skip(reason="hypothesis not installed")
+                def skipped():
+                    pass
+                skipped.__name__ = f.__name__
+                return skipped
+            return deco
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        return given, settings, _Strategies()

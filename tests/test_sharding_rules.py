@@ -18,8 +18,8 @@ def mesh16():
     from jax.sharding import Mesh
     # single CPU device replicated into an abstract mesh is not allowed;
     # use AbstractMesh for pure spec logic
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((4, 4), ("data", "model"))
+    from repro.compat import abstract_mesh
+    return abstract_mesh((4, 4), ("data", "model"))
 
 
 class TestParamSpecs:
