@@ -8,7 +8,9 @@ protocol: same search algorithm for every index).
 """
 from __future__ import annotations
 
+import contextlib
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +19,36 @@ import numpy as np
 from repro.core import grnnd, recall as R
 from repro.core.search import search
 from repro.data import synthetic
+from repro.kernels import ops
 
 K = 10
 EF = 48
+
+# interpret mode steps the kernel grid from Python: benchmarks cap their
+# dataset so a full run stays tractable (parity with the fast path is
+# separately asserted by the test tier)
+INTERPRET_MAX_N = 512
+
+
+def backend_scope(backend: str | None):
+    """Fresh scoped override of the kernel backend; no-op for None."""
+    return contextlib.nullcontext() if backend is None else ops.backend(backend)
+
+
+def resolve_backend(backend: str | None) -> tuple[str, str]:
+    """Map a --backend flag to (effective backend, row-name tag).
+
+    The effective backend is what will actually execute ("pallas" degrades
+    to "interpret" off-TPU); the tag is the `-<effective>` row-name suffix
+    the fig benchmarks append.  The ambient selection (no flag) stays
+    untagged EXCEPT when it resolves to interpret: interpret runs shrink
+    the benchmark scale, and rows from a shrunken run must never share a
+    name with full-scale rows (cross-run comparability, same class of bug
+    as the bench_datasets seeding fix).
+    """
+    with backend_scope(backend):
+        eff = ops.effective_backend()
+    return eff, f"-{eff}" if (backend is not None or eff == "interpret") else ""
 
 
 def bench_datasets(n: int = 6000, nq: int = 300):
@@ -28,9 +57,14 @@ def bench_datasets(n: int = 6000, nq: int = 300):
     for name, preset in (("sift-like", "sift-like"),
                          ("deep-like", "deep-like"),
                          ("gist-like", "gist-like")):
-        nn = n if preset != "gist-like" else max(n // 2, 1000)
-        x = synthetic.make_preset(jax.random.PRNGKey(hash(name) % 2**31),
-                                  preset, nn)
+        # gist floor never exceeds the caller's n: interpret-mode callers
+        # clamp n to INTERPRET_MAX_N, and the floor must not bypass that
+        nn = n if preset != "gist-like" else min(max(n // 2, 1000), n)
+        # crc32, not hash(): str hashing is salted per process, which made
+        # every benchmark invocation draw a DIFFERENT dataset — rows from
+        # separate runs (e.g. dense vs hashed search) were incomparable
+        seed = zlib.crc32(name.encode()) % 2**31
+        x = synthetic.make_preset(jax.random.PRNGKey(seed), preset, nn)
         q = synthetic.queries_from(jax.random.PRNGKey(7), x, nq)
         gt = R.brute_force_knn(x, q, K)
         out[name] = (x, q, gt)
@@ -56,15 +90,25 @@ def eval_recall(x, graph_ids, q, gt, ef: int = EF):
     return R.recall_at_k(res.ids, gt)
 
 
-def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3):
-    res = search(x, graph_ids, q, k=K, ef=ef)      # compile + warm
-    res.ids.block_until_ready()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        res = search(x, graph_ids, q, k=K, ef=ef)
+def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3,
+                 backend: str | None = None, visited: str = "dense",
+                 visited_cap: int | None = None):
+    """Compile-excluded search wall time -> (result, QPS).
+
+    `backend`/`visited`/`visited_cap` select the query-path configuration
+    (kernels/search_expand.py + hashed visited set); defaults reproduce the
+    ambient-backend dense-bitmask search.
+    """
+    kw = dict(k=K, ef=ef, visited=visited, visited_cap=visited_cap)
+    with backend_scope(backend):
+        res = search(x, graph_ids, q, **kw)        # compile + warm
         res.ids.block_until_ready()
-        times.append(time.perf_counter() - t0)
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = search(x, graph_ids, q, **kw)
+            res.ids.block_until_ready()
+            times.append(time.perf_counter() - t0)
     qps = q.shape[0] / min(times)
     return res, qps
 

@@ -33,24 +33,15 @@ import jax.numpy as jnp
 
 from benchmarks import common as C
 from repro.core import grnnd, rnnd_ref, pools
-from repro.kernels import ops
-
-# interpret mode steps the kernel grid from Python: cap the dataset so a
-# full multi-dataset run finishes in minutes (parity with the fast path
-# is separately asserted by tests/test_rng_round.py)
-INTERPRET_MAX_N = 512
 
 
 def run(n_seq: int = 2500, backend: str | None = None) -> list[str]:
     """`backend` applies to the GRNND BUILD only (the system under test);
     ground truth and recall evaluation keep the fixed default search path,
     per the paper's protocol."""
-    build_backend = backend if backend is not None else ops.get_backend()
-    with ops.backend(build_backend):
-        eff = ops.effective_backend()
-    tag = "" if backend is None else f"-{eff}"
+    eff, tag = C.resolve_backend(backend)
     if eff == "interpret":
-        n_seq = min(n_seq, INTERPRET_MAX_N)
+        n_seq = min(n_seq, C.INTERPRET_MAX_N)
 
     rows = []
     for name, (x, q, gt) in C.bench_datasets(n=n_seq).items():
@@ -73,7 +64,7 @@ def run(n_seq: int = 2500, backend: str | None = None) -> list[str]:
         # T1*T2 rounds of fully independent vertex updates.
         cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
                                 pairs_per_vertex=24)
-        with ops.backend(build_backend):
+        with C.backend_scope(backend):
             pool, t_g = C.timed_build(x, cfg)
         r_g = C.eval_recall(x, pool.ids, q, gt)
         path_seq = n * 2 * 2
@@ -101,7 +92,7 @@ if __name__ == "__main__":
                          "(default: current REPRO_KERNEL_BACKEND/auto)")
     ap.add_argument("--n", type=int, default=2500,
                     help="vectors per dataset (interpret runs are capped "
-                         f"at {INTERPRET_MAX_N})")
+                         f"at {C.INTERPRET_MAX_N})")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for row in run(n_seq=args.n, backend=args.backend):

@@ -2,39 +2,103 @@
 
 Fixed construction settings per method; the search parameter (ef) sweeps the
 QPS-recall curve with the SAME unified search for every graph.
+
+Query-path configuration (EXPERIMENTS.md §Perf cell E):
+
+    PYTHONPATH=src python benchmarks/fig6_qps.py --backend pallas \
+        --visited hashed
+
+`--backend` selects the kernel path of the SEARCH (the fused
+`search_expand` kernel; off-TPU "pallas" degrades to interpret mode — a
+correctness harness, so the dataset is capped and rows are labeled with
+the effective backend).  `--visited` selects the visited-set
+representation (dense (Q, N) bitmask vs the O(Q·H) hashed table).  Graph
+construction stays on the ambient default path: the graph under test is
+identical across query configurations, per the paper's protocol.
 """
 from __future__ import annotations
 
-import jax
+import argparse
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig6_qps.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
 from repro.core import grnnd, rnnd_ref
+from repro.core.recall import recall_at_k
 
 
-def run(n: int = 4000) -> list[str]:
+def run(n: int = 4000, backend: str | None = None, visited: str = "dense",
+        visited_cap: int | None = None) -> list[str]:
+    eff, tag = C.resolve_backend(backend)
+    # interpret mode steps the (Q, R) kernel grid from Python once per beam
+    # step: shrink vectors/queries/sweep so the end-to-end run stays in
+    # minutes (parity with the fast path is asserted by the test tier)
+    interp = eff == "interpret"
+    nq, repeats, efs = (64, 1, (16, 32)) if interp else (300, 2, (16, 32, 64, 128))
+    if interp:
+        n = min(n, C.INTERPRET_MAX_N)
+    # encode the full query-path configuration in the row name so rows from
+    # different runs are never incomparable under the same label
+    vtag = "" if visited == "dense" else f"-{visited}"
+    if visited == "hashed" and visited_cap is not None:
+        vtag += f"-c{visited_cap}"
+
     rows = []
-    for name, (x, q, gt) in C.bench_datasets(n=n).items():
+    for name, (x, q, gt) in C.bench_datasets(n=n, nq=nq).items():
         cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
                                 pairs_per_vertex=24)
         pool, _ = C.timed_build(x, cfg)
 
         ids_seq = None
-        if x.shape[0] <= 3000:  # sequential baseline only at small n
+        if x.shape[0] <= 3000 and not interp:  # sequential baseline, small n
             adj = rnnd_ref.build_graph_ref(np.asarray(x), s=12, r=24,
                                            t1=2, t2=2, seed=0)
             ids_seq = jnp.asarray(rnnd_ref.adjacency_to_pool_arrays(adj, 24))
 
-        for ef in (16, 32, 64, 128):
-            res, qps = C.timed_search(x, pool.ids, q, ef=ef, repeats=2)
-            from repro.core.recall import recall_at_k
+        for ef in efs:
+            res, qps = C.timed_search(x, pool.ids, q, ef=ef, repeats=repeats,
+                                      backend=backend, visited=visited,
+                                      visited_cap=visited_cap)
             rec = recall_at_k(res.ids, gt)
-            rows.append(C.row(f"fig6/{name}/grnnd/ef{ef}", 1.0 / qps,
-                              f"recall={rec:.3f} qps={qps:.0f}"))
+            rows.append(C.row(f"fig6/{name}/grnnd{tag}{vtag}/ef{ef}",
+                              1.0 / qps, f"recall={rec:.3f} qps={qps:.0f}"))
             if ids_seq is not None:
-                res2, qps2 = C.timed_search(x, ids_seq, q, ef=ef, repeats=2)
+                res2, qps2 = C.timed_search(x, ids_seq, q, ef=ef,
+                                            repeats=repeats, backend=backend,
+                                            visited=visited,
+                                            visited_cap=visited_cap)
                 rec2 = recall_at_k(res2.ids, gt)
-                rows.append(C.row(f"fig6/{name}/rnnd-cpu/ef{ef}", 1.0 / qps2,
+                rows.append(C.row(f"fig6/{name}/rnnd-cpu{tag}{vtag}/ef{ef}",
+                                  1.0 / qps2,
                                   f"recall={rec2:.3f} qps={qps2:.0f}"))
     return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for the SEARCH (default: current "
+                         "REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--visited", default="dense",
+                    choices=["dense", "hashed"],
+                    help="visited-set representation of the search")
+    ap.add_argument("--visited-cap", type=int, default=None,
+                    help="hashed-table slots per query "
+                         "(default: core.search.default_visited_cap(ef))")
+    ap.add_argument("--n", type=int, default=4000,
+                    help="vectors per dataset (interpret runs are capped "
+                         f"at {C.INTERPRET_MAX_N})")
+    args = ap.parse_args()
+    if args.visited_cap is not None and args.visited != "hashed":
+        ap.error("--visited-cap only applies with --visited hashed")
+    print("name,us_per_call,derived")
+    for row in run(n=args.n, backend=args.backend, visited=args.visited,
+                   visited_cap=args.visited_cap):
+        print(row, flush=True)

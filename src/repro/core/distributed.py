@@ -18,6 +18,13 @@ module implements it for TPU pods.  Layout:
 
 Determinism: identical results for any shard count, because the merge stage
 is the same order-free topr_merge dataflow as the single-device build.
+
+Serving side: `distributed_search` shards *queries* over the mesh (searches
+are embarrassingly parallel over queries; x and the graph are replicated,
+per-query search state — beam + visited set — stays shard-local, and no
+collectives run inside the loop).  With `visited="hashed"` the per-shard
+state is O(q_loc · visited_cap), independent of N — the serving layout for
+"millions of users" traffic (DESIGN.md §6.4).
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from repro.compat import shard_map
 from repro.core import pools as P
 from repro.core.grnnd import (
     GRNNDConfig, _pair_requests_chunk, _sorted_requests_chunk)
+from repro.core.search import SearchResult, medoid, search
 from repro.kernels import ops
 
 
@@ -183,6 +191,80 @@ def sharded_build_graph(
         if t1 != cfg.t1 - 1:
             pool = rev_fn(pool)
     return pool
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
+                       max_steps: int, visited: str, visited_cap: int | None,
+                       backend: str):
+    """One jitted shard_map per (mesh, axes, search-config) — cached so
+    repeated serving batches reuse the compiled executable instead of
+    re-tracing per call.  `backend` is unused in the body but part of the
+    cache key: the inner search dispatches kernels at trace time (same
+    contract as search._search_impl)."""
+    del backend
+    qspec = PSpec(axes)
+    rspec = PSpec()
+
+    def body(x_r, graph_r, q_loc, entry_r):
+        return search(x_r, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
+                      entry=entry_r, visited=visited, visited_cap=visited_cap)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(rspec, rspec, qspec, rspec),
+        out_specs=SearchResult(qspec, qspec, qspec),
+        check_vma=False,
+    ))
+
+
+def distributed_search(
+    mesh: Mesh,
+    axes: Sequence[str],
+    x: jnp.ndarray,
+    graph_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int = 10,
+    ef: int = 64,
+    max_steps: int = 512,
+    entry: jnp.ndarray | None = None,
+    visited: str = "dense",
+    visited_cap: int | None = None,
+) -> SearchResult:
+    """Query-sharded beam search over the mesh.
+
+    `axes` are the mesh axis names carrying the query shard.  x and the
+    graph are replicated; each shard runs the unmodified `core.search.search`
+    on its query slice, so results are bitwise-identical to the single-device
+    search for any shard count (no cross-shard state exists).  Queries are
+    padded to a multiple of the shard count and the pad rows sliced off.
+    """
+    axes = tuple(axes)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    if visited == "dense":
+        visited_cap = None  # unused; normalized to one cache entry (as search())
+
+    if entry is None:
+        entry = medoid(x)  # once, replicated — not once per shard
+
+    qn = queries.shape[0]
+    pad = (-qn) % n_shards
+    if pad:
+        queries = jnp.concatenate(
+            [queries, jnp.broadcast_to(queries[:1], (pad, queries.shape[1]))])
+
+    sharded = _sharded_search_fn(mesh, axes, k, ef, max_steps, visited,
+                                 visited_cap, ops.effective_backend())
+    x = jax.device_put(x, NamedSharding(mesh, PSpec()))
+    graph_ids = jax.device_put(graph_ids, NamedSharding(mesh, PSpec()))
+    queries = jax.device_put(queries, NamedSharding(mesh, PSpec(axes)))
+    res = sharded(x, graph_ids, queries, entry)
+    if pad:
+        res = SearchResult(res.ids[:qn], res.dists[:qn], res.n_expanded[:qn])
+    return res
 
 
 def _sharded_reverse(mesh, axes, cfg: GRNNDConfig, pool: P.Pool) -> P.Pool:

@@ -3,9 +3,28 @@
 Standard greedy beam search (the "fixed search algorithm" the paper uses to
 compare indices): a candidate list of size `ef` per query, expand the closest
 unexpanded candidate, push its unvisited neighbors, stop when every list
-entry is expanded.  Fully batched over queries with jax.lax.while_loop; the
-visited set is a dense (Q, N) bitmask (exact; a hashed variant would replace
-it at billion scale — see DESIGN.md).
+entry is expanded.  Fully batched over queries with jax.lax.while_loop.
+
+The production pieces (DESIGN.md §6):
+
+  * the expansion step — gather the selected vertex's R neighbor vectors,
+    compute query->neighbor distances, probe the visited set — is one fused
+    op (`ops.search_expand`, kernels/search_expand.py) with a ref.py oracle;
+  * the visited set is selectable: `visited="dense"` keeps the exact (Q, N)
+    bitmask (right at reproduction scale), `visited="hashed"` replaces it
+    with a fixed-size per-query open-addressed table of `visited_cap` int32
+    slots, making search memory O(Q·H) independent of N.  Collisions and
+    capacity misses only cause harmless re-expansions, never false skips;
+    with `visited_cap >= N` the hashed path is provably collision-free and
+    bitwise-identical to the dense reference (tests/test_search_parity.py);
+  * the per-step beam merge is the deduplicating `ops.topr_merge` primitive
+    the build path already uses — no full (Q, ef+R) argsort per step, and
+    re-entering duplicates (possible under hash capacity misses) are
+    absorbed instead of crowding the beam.
+
+Query sharding over a device mesh lives in `core.distributed.
+distributed_search` (x and graph replicated, queries sharded — searches are
+embarrassingly parallel over queries).
 """
 from __future__ import annotations
 
@@ -16,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.ref import visited_probe_positions
 
 
 class SearchResult(NamedTuple):
@@ -30,7 +50,139 @@ def medoid(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmin(ops.pairwise_sqdist(c, x)[0]).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps"))
+def default_visited_cap(ef: int) -> int:
+    """Default hashed-table size: O(ef·expansion), independent of N.
+
+    Each expansion inserts at most R fresh ids and the beam retires after
+    ~ef expansions, so 8·ef slots keep the load factor low enough that
+    capacity misses (harmless re-expansions) stay rare (DESIGN.md §6.1).
+    """
+    return max(256, 8 * ef)
+
+
+def _table_insert(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Insert (Q, R) ids into the (Q, H) open-addressed tables.
+
+    Sequential over the R slots (R is small), vectorized over queries, so
+    no two inserts race for the same empty slot.  An id whose probe window
+    holds neither itself nor an empty slot is dropped — a capacity miss,
+    surfacing later as a harmless re-expansion.  ids < 0 are skipped.
+    """
+    q, h = table.shape
+    r = ids.shape[1]
+    qrows = jnp.arange(q, dtype=jnp.int32)
+
+    def body(rr, tab):
+        v = jax.lax.dynamic_index_in_dim(ids, rr, axis=1, keepdims=False)
+        pos = visited_probe_positions(v, h)               # (Q, PL)
+        vals = tab[qrows[:, None], pos]                   # (Q, PL)
+        found = jnp.any(vals == v[:, None], axis=-1)
+        empty = vals == -1
+        has_empty = jnp.any(empty, axis=-1)
+        ins = pos[qrows, jnp.argmax(empty, axis=-1)]      # first empty probe
+        do = (v >= 0) & ~found & has_empty
+        return tab.at[qrows, ins].set(jnp.where(do, v, tab[qrows, ins]))
+
+    return jax.lax.fori_loop(0, r, body, table)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "max_steps", "visited", "visited_cap",
+                     "backend"))
+def _search_impl(
+    x: jnp.ndarray,
+    graph_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    entry: jnp.ndarray,
+    *,
+    k: int,
+    ef: int,
+    max_steps: int,
+    visited: str,
+    visited_cap: int,
+    backend: str,
+) -> SearchResult:
+    # `backend` is unused in the body but part of the jit key: the kernels
+    # dispatch on the global ops backend at TRACE time (same contract as
+    # grnnd._build_graph_impl).
+    del backend
+    n, r = graph_ids.shape
+    q = queries.shape[0]
+    qrows = jnp.arange(q, dtype=jnp.int32)
+
+    d_entry = ops.rowwise_sqdist(queries, jnp.broadcast_to(x[entry], queries.shape))
+    cand_ids = jnp.full((q, ef), -1, jnp.int32).at[:, 0].set(entry)
+    cand_dists = jnp.full((q, ef), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
+    expanded = jnp.zeros((q, ef), bool)
+    n_exp = jnp.zeros((q,), jnp.int32)
+
+    entry_col = jnp.broadcast_to(entry, (q, 1)).astype(jnp.int32)
+    if visited == "dense":
+        vstate = jnp.zeros((q, n), bool).at[:, entry].set(True)
+        # an empty 1-slot table turns the fused kernel's probe into a no-op
+        lookup = jnp.full((q, 1), -1, jnp.int32)
+    else:
+        vstate = _table_insert(jnp.full((q, visited_cap), -1, jnp.int32),
+                               entry_col)
+        lookup = None
+
+    def cond(state):
+        cand_ids, cand_dists, expanded, vstate, n_exp, steps = state
+        frontier = (cand_ids >= 0) & ~expanded
+        return (steps < max_steps) & jnp.any(frontier)
+
+    def body(state):
+        cand_ids, cand_dists, expanded, vstate, n_exp, steps = state
+        frontier_d = jnp.where((cand_ids >= 0) & ~expanded, cand_dists, jnp.inf)
+        sel = jnp.argmin(frontier_d, axis=-1)                      # (Q,)
+        active = jnp.isfinite(jnp.min(frontier_d, axis=-1))        # (Q,)
+        sel_id = cand_ids[qrows, sel]
+        expanded = expanded.at[qrows, sel].set(True)
+
+        nbrs = graph_ids[jnp.clip(sel_id, 0)]                      # (Q, R)
+        nbrs = jnp.where(active[:, None] & (nbrs >= 0), nbrs, -1)
+
+        # fused: gather neighbor vectors, query->neighbor distances, and the
+        # visited probe in one pass (dense mode probes the empty dummy table
+        # and refines `fresh` with the exact bitmask below)
+        nbrs, dq, fresh = ops.search_expand(
+            x, queries, nbrs, vstate if lookup is None else lookup)
+        if visited == "dense":
+            seen = vstate[qrows[:, None], jnp.clip(nbrs, 0)]
+            fresh = fresh & ~seen
+            vstate = vstate.at[qrows[:, None], jnp.clip(nbrs, 0)].max(fresh)
+        else:
+            vstate = _table_insert(vstate, jnp.where(fresh, nbrs, -1))
+
+        dq = jnp.where(fresh, dq, jnp.inf)
+        n_exp = n_exp + jnp.sum(fresh, axis=-1, dtype=jnp.int32)
+
+        # merge: keep ef best of (candidate list ∪ fresh neighbors) via the
+        # deduplicating top-R primitive; candidates precede fresh entries,
+        # so a re-entering duplicate keeps its original (possibly expanded)
+        # beam slot
+        all_ids = jnp.concatenate([cand_ids, jnp.where(fresh, nbrs, -1)],
+                                  axis=-1)
+        all_d = jnp.concatenate([cand_dists, dq], axis=-1)
+        new_ids, new_d = ops.topr_merge(all_ids, all_d, ef)
+
+        # re-derive the expanded flags: an entry is expanded iff its id
+        # matches a previously-expanded candidate slot (-2 sentinel keeps
+        # empty slots from matching each other)
+        exp_src = jnp.where(expanded & (cand_ids >= 0), cand_ids, -2)
+        new_expanded = jnp.any(
+            new_ids[:, :, None] == exp_src[:, None, :], axis=-1)
+        new_expanded = new_expanded | (new_ids < 0)
+
+        return new_ids, new_d, new_expanded, vstate, n_exp, steps + 1
+
+    state = (cand_ids, cand_dists, expanded, vstate, n_exp, jnp.int32(0))
+    cand_ids, cand_dists, expanded, vstate, n_exp, _ = jax.lax.while_loop(
+        cond, body, state)
+    return SearchResult(cand_ids[:, :k], cand_dists[:, :k], n_exp)
+
+
 def search(
     x: jnp.ndarray,
     graph_ids: jnp.ndarray,
@@ -40,68 +192,26 @@ def search(
     ef: int = 64,
     max_steps: int = 512,
     entry: jnp.ndarray | None = None,
+    visited: str = "dense",
+    visited_cap: int | None = None,
 ) -> SearchResult:
-    """Search the graph for the k nearest vertices to each query row."""
-    n, r = graph_ids.shape
-    q = queries.shape[0]
+    """Search the graph for the k nearest vertices to each query row.
+
+    `visited` selects the visited-set representation: "dense" (exact (Q, N)
+    bitmask) or "hashed" (per-query `visited_cap`-slot open-addressed table,
+    O(Q·H) memory independent of N — the serving configuration at scale).
+    `visited_cap` defaults to `default_visited_cap(ef)`.
+    """
     assert ef >= k
+    assert visited in ("dense", "hashed"), visited
+    assert visited_cap is None or visited_cap > 0, visited_cap
     if entry is None:
         entry = medoid(x)
-
-    qrows = jnp.arange(q, dtype=jnp.int32)
-
-    d_entry = ops.rowwise_sqdist(queries, jnp.broadcast_to(x[entry], queries.shape))
-    cand_ids = jnp.full((q, ef), -1, jnp.int32).at[:, 0].set(entry)
-    cand_dists = jnp.full((q, ef), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
-    expanded = jnp.zeros((q, ef), bool)
-    visited = jnp.zeros((q, n), bool).at[:, entry].set(True)
-    n_exp = jnp.zeros((q,), jnp.int32)
-
-    def cond(state):
-        cand_ids, cand_dists, expanded, visited, n_exp, steps = state
-        frontier = (cand_ids >= 0) & ~expanded
-        return (steps < max_steps) & jnp.any(frontier)
-
-    def body(state):
-        cand_ids, cand_dists, expanded, visited, n_exp, steps = state
-        frontier_d = jnp.where((cand_ids >= 0) & ~expanded, cand_dists, jnp.inf)
-        sel = jnp.argmin(frontier_d, axis=-1)                      # (Q,)
-        active = jnp.isfinite(jnp.min(frontier_d, axis=-1))        # (Q,)
-        sel_id = cand_ids[qrows, sel]
-        expanded = expanded.at[qrows, sel].set(True)
-
-        nbrs = graph_ids[jnp.clip(sel_id, 0)]                      # (Q, R)
-        nbrs = jnp.where(active[:, None] & (nbrs >= 0), nbrs, -1)
-        seen = visited[qrows[:, None], jnp.clip(nbrs, 0)]
-        fresh = (nbrs >= 0) & ~seen
-        visited = visited.at[qrows[:, None], jnp.clip(nbrs, 0)].max(fresh)
-
-        # distances query -> neighbor vectors
-        nv = x[jnp.clip(nbrs, 0).reshape(-1)].reshape(q, r, -1)
-        dq = ops.rowwise_sqdist(
-            jnp.repeat(queries, r, axis=0).reshape(q * r, -1),
-            nv.reshape(q * r, -1),
-        ).reshape(q, r)
-        dq = jnp.where(fresh, dq, jnp.inf)
-        n_exp = n_exp + jnp.sum(fresh, axis=-1, dtype=jnp.int32)
-
-        # merge: keep ef best of (candidate list + fresh neighbors);
-        # ids are unique by construction (visited filter), so plain
-        # sort-merge suffices — but reuse topr_merge for the dedup guarantee.
-        all_ids = jnp.concatenate([cand_ids, jnp.where(fresh, nbrs, -1)], axis=-1)
-        all_d = jnp.concatenate([cand_dists, dq], axis=-1)
-        all_exp = jnp.concatenate([expanded, jnp.zeros((q, r), bool)], axis=-1)
-        order = jnp.argsort(jnp.where(all_ids >= 0, all_d, jnp.inf), axis=-1)
-        all_ids = jnp.take_along_axis(all_ids, order, axis=-1)
-        all_d = jnp.take_along_axis(all_d, order, axis=-1)
-        all_exp = jnp.take_along_axis(all_exp, order, axis=-1)
-        cand_ids = all_ids[:, :ef]
-        cand_dists = all_d[:, :ef]
-        expanded = all_exp[:, :ef] | (cand_ids < 0)
-
-        return cand_ids, cand_dists, expanded, visited, n_exp, steps + 1
-
-    state = (cand_ids, cand_dists, expanded, visited, n_exp, jnp.int32(0))
-    cand_ids, cand_dists, expanded, visited, n_exp, _ = jax.lax.while_loop(
-        cond, body, state)
-    return SearchResult(cand_ids[:, :k], cand_dists[:, :k], n_exp)
+    if visited == "dense":
+        cap = 0  # unused; normalized so it never fragments the jit cache
+    else:
+        cap = visited_cap if visited_cap is not None else default_visited_cap(ef)
+    return _search_impl(x, graph_ids, queries, entry,
+                        k=k, ef=ef, max_steps=max_steps,
+                        visited=visited, visited_cap=cap,
+                        backend=ops.effective_backend())

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas, rowwise_sqdist_pallas
 from repro.kernels.rng_round import rng_round_pallas
+from repro.kernels.search_expand import search_expand_pallas
 from repro.kernels.topr_merge import topr_merge_pallas
 
 _VALID = ("auto", "pallas", "interpret", "ref", "xla")
@@ -94,6 +95,18 @@ def topr_merge(ids: jnp.ndarray, dists: jnp.ndarray, r: int):
     if get_backend() == "ref":
         return _ref.topr_merge_ref(ids, dists, r)
     return topr_merge_pallas(ids, dists, r, interpret=_interpret())
+
+
+def search_expand(x, queries, nbrs, table):
+    """Fused beam-search expansion step: (ids, dists, fresh).
+
+    See ref.search_expand_ref for semantics; the pallas path fuses the
+    neighbor-vector gather, query->neighbor distances, and the visited-table
+    probe into one VMEM-resident pass (kernels/search_expand.py).
+    """
+    if get_backend() == "ref":
+        return _ref.search_expand_ref(x, queries, nbrs, table)
+    return search_expand_pallas(x, queries, nbrs, table, interpret=_interpret())
 
 
 def rng_propagation_round(x, ids, dists, si, sj):

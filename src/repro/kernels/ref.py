@@ -14,7 +14,15 @@ __all__ = [
     "rowwise_sqdist_ref",
     "topr_merge_ref",
     "rng_round_ref",
+    "search_expand_ref",
+    "visited_probe_positions",
+    "HASH_PROBES",
 ]
+
+# Linear-probe window of the open-addressed visited table (DESIGN.md §6.1);
+# the single source shared by the oracle, the Pallas kernel, and the
+# table-insert path in core/search.py.
+HASH_PROBES = 8
 
 
 def pairwise_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -87,6 +95,57 @@ def rng_round_ref(
     return dst, far, dij, kill.astype(bool)
 
 
+def visited_probe_positions(ids: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Probe positions (..., HASH_PROBES) of ids in an H-slot visited table.
+
+    Identity-mod base hash + linear probing: slot l of id v is
+    (v % H + l) % H.  Vertex ids are arbitrary labels, so identity-mod is
+    as uniform as any mix for permutation-invariant id assignment — and it
+    is injective whenever H >= N, which makes `visited_cap >= N` provably
+    collision-free (the dense-parity guarantee, DESIGN.md §6.1).
+    """
+    base = jnp.clip(ids.astype(jnp.int32), 0) % h
+    return (base[..., None] +
+            jnp.arange(HASH_PROBES, dtype=jnp.int32)) % h
+
+
+def search_expand_ref(
+    x: jnp.ndarray,
+    queries: jnp.ndarray,
+    nbrs: jnp.ndarray,
+    table: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused beam-search expansion step (see kernels/search_expand.py).
+
+    Args:
+      x:       (N, D) dataset.
+      queries: (Q, D) query vectors.
+      nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex;
+               -1 marks an invalid entry (inactive query / empty slot).
+      table:   (Q, H) int32 open-addressed visited table; -1 = empty slot.
+
+    Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool): the
+    neighbor ids (invalid -> -1), exact squared query->neighbor distances
+    (+inf where invalid), and the freshness mask — valid AND not found in
+    the table's probe window.  False positives are impossible (exact keys);
+    a capacity miss only re-marks an already-visited id as fresh, which the
+    deduplicating beam merge absorbs.
+    """
+    q, r = nbrs.shape
+    valid = nbrs >= 0
+    nv = x[jnp.clip(nbrs, 0).reshape(-1)].reshape(q, r, -1).astype(jnp.float32)
+    diff = queries.astype(jnp.float32)[:, None, :] - nv
+    d = jnp.sum(diff * diff, axis=-1)
+    d = jnp.where(valid, d, jnp.inf)
+
+    h = table.shape[1]
+    pos = visited_probe_positions(nbrs, h)                    # (Q, R, PL)
+    qrows = jnp.arange(q, dtype=jnp.int32)[:, None, None]
+    vals = table[qrows, pos]                                  # (Q, R, PL)
+    found = jnp.any(vals == nbrs[..., None], axis=-1)
+    return jnp.where(valid, nbrs, -1), d, valid & ~found
+
+
 def topr_merge_ref(
     ids: jnp.ndarray,
     dists: jnp.ndarray,
@@ -109,6 +168,10 @@ def topr_merge_ref(
     """
     ids = ids.astype(jnp.int32)
     dists = jnp.where(ids < 0, jnp.inf, dists.astype(jnp.float32))
+    if r > ids.shape[-1]:  # W < r: widen so the output is always (B, r)
+        pad = r - ids.shape[-1]
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=jnp.inf)
 
     # Dedup: an entry is a duplicate if an earlier slot (or an equal-position
     # slot with smaller dist) holds the same id.  O(W^2) mask — W is small.

@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: fused beam-search expansion step.
+
+One expansion step of the batched beam search (core/search.py) previously
+lowered to the same unfused shape as the old propagation round: a
+materialized (Q·R, D) gather of the selected vertex's neighbor vectors, a
+`jnp.repeat` of the queries to match, a `rowwise_sqdist` over the pair, and
+a separate dense visited-bitmask lookup — every intermediate written to and
+re-read from HBM, on the query-serving hot path (EXPERIMENTS.md §Perf
+cell E; GGNN's fused gather-and-distance expansion is the GPU analogue).
+
+This kernel fuses the whole step.  Per query q it
+
+  1. gathers the R neighbor vectors of the selected vertex ONCE into a
+     VMEM scratch via index-dependent BlockSpecs over the scalar-prefetched
+     (clamped) neighbor ids — grid (Q, R), one row per step, the same
+     DMA-gather idiom as `rng_round.py`;
+  2. at the last row, computes all R query→neighbor squared distances
+     in-register (subtract-square-reduce, the `rowwise_sqdist_ref` order);
+  3. probes the query's open-addressed visited table (H int32 slots,
+     identity-mod hash + linear probe window, DESIGN.md §6.1): the table
+     is wrap-extended by PROBES slots outside the kernel, so each id's
+     probe window is one contiguous O(PROBES) dynamic slice — membership
+     work per id is independent of H — and emits (ids, dists, fresh-mask)
+     in one pass.
+
+The (Q·R, D) gathered-vector and repeated-query intermediates never exist:
+HBM traffic per step drops from ~3·(Q·R·D + Q·D·R) read/write/re-read bytes
+to R·D reads per query plus the small (Q, R) outputs.
+
+Membership semantics: `fresh[q, j]` is true iff nbrs[q, j] is a valid id
+AND the id is NOT stored in the table's probe window — false positives are
+impossible (exact int32 keys, not fingerprints), so a hash-capacity miss
+can only cause a harmless re-expansion, never a wrongly-skipped vertex.
+Table *updates* stay outside the kernel (core/search.py inserts after the
+step); the kernel is a pure read.  A (Q, 1) all-empty table turns the probe
+into a no-op, which is how the dense-visited path shares this kernel.
+
+Semantics match `ref.search_expand_ref` bitwise under a common jit context
+(tests/test_search_parity.py): probe positions follow the same
+identity-mod + linear-probe formula and the distance reduction follows the
+same subtract-square-reduce order.  As in `rng_round.py`, D is zero-padded
+to the 128-lane width for real lowering only; interpret mode — the bitwise
+parity harness — skips the pad to keep the fp32 reduction tree intact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Single source of truth for the probe-window length (shared with the
+# oracle and the table-insert path in core/search.py).
+from repro.kernels.ref import HASH_PROBES
+
+
+def _search_expand_kernel(nbrs_pref, xrow_ref, q_ref, nbrs_ref, tab_ref,
+                          ids_ref, d_ref, fresh_ref, vecs_ref,
+                          *, r: int, h: int, probes: int):
+    """Grid: (Q, R). Step (q, rr) DMAs x[nbrs[q, rr]] into vecs row rr; the
+    distance + probe evaluation runs once per query on the final row."""
+    del nbrs_pref  # consumed by the index_maps
+    rr = pl.program_id(1)
+    vecs_ref[pl.ds(rr, 1), :] = xrow_ref[...].astype(jnp.float32)
+
+    @pl.when(rr == r - 1)
+    def _evaluate():
+        vecs = vecs_ref[...]                          # (R, D) f32, VMEM
+        qv = q_ref[...].astype(jnp.float32)           # (1, D)
+        nbrs = nbrs_ref[...]                          # (1, R) int32
+        # wrap-extended table (1, H + PROBES): slot (v % H + l) % H of the
+        # H-slot table is slot (v % H) + l here, so each id's probe window
+        # is one contiguous O(PROBES) slice — work independent of H
+        tab = tab_ref[...]
+
+        diff = vecs - qv                              # (R, D) broadcast
+        d = jnp.sum(diff * diff, axis=1).reshape(1, r)
+        valid = nbrs >= 0
+        d = jnp.where(valid, d, jnp.inf)
+
+        found = []
+        for j in range(r):                            # R is small: unrolled
+            v = nbrs[0, j]
+            base = jnp.clip(v, 0) % h
+            win = jax.lax.dynamic_slice(tab, (jnp.int32(0), base),
+                                        (1, probes))
+            found.append(jnp.any(win == v))
+        found = jnp.stack(found).reshape(1, r)
+
+        ids_ref[...] = jnp.where(valid, nbrs, -1)
+        d_ref[...] = d
+        fresh_ref[...] = (valid & ~found).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def search_expand_pallas(
+    x: jnp.ndarray,
+    queries: jnp.ndarray,
+    nbrs: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    interpret: bool = False,
+):
+    """Fused expansion step over a (Q, R) neighbor-id batch.
+
+    Args:
+      x:       (N, D) dataset (stays in HBM; rows are DMA'd on demand).
+      queries: (Q, D) query vectors.
+      nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex,
+               -1 = invalid (inactive query or empty graph slot).
+      table:   (Q, H) int32 open-addressed visited table, -1 = empty slot.
+
+    Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool) — identical
+    to `ref.search_expand_ref`.
+    """
+    qn, r = nbrs.shape
+    n, d = x.shape
+    h = table.shape[1]
+    nbrs_safe = jnp.clip(nbrs.astype(jnp.int32), 0, n - 1)
+    # wrap-extend the table so every (mod H) probe window is contiguous:
+    # ext[base + l] == table[(base + l) % H] for base < H, l < PROBES
+    # (tiled, not a single concat, so H < PROBES also wraps correctly)
+    reps = 1 + -(-HASH_PROBES // h)
+    tab_ext = jnp.tile(table.astype(jnp.int32),
+                       (1, reps))[:, :h + HASH_PROBES]
+    he = h + HASH_PROBES
+
+    # Lane-align D for the real TPU lowering only (see module docstring).
+    pad_d = 0 if interpret else (-d) % 128
+    xp = jnp.pad(x, ((0, 0), (0, pad_d))) if pad_d else x
+    qp = jnp.pad(queries, ((0, 0), (0, pad_d))) if pad_d else queries
+    dp = d + pad_d
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,               # nbrs_safe lands as index operand
+        grid=(qn, r),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (nb_ref[q, rr], 0)),
+            pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (q, 0)),
+            pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
+            pl.BlockSpec((1, he), lambda q, rr, nb_ref: (q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
+            pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
+            pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((r, dp), jnp.float32)],
+    )
+    ids, dists, fresh = pl.pallas_call(
+        functools.partial(_search_expand_kernel, r=r, h=h,
+                          probes=HASH_PROBES),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, r), jnp.int32),
+            jax.ShapeDtypeStruct((qn, r), jnp.float32),
+            jax.ShapeDtypeStruct((qn, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nbrs_safe, xp, qp, nbrs.astype(jnp.int32), tab_ext)
+    return ids, dists, fresh.astype(bool)

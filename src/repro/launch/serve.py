@@ -1,7 +1,17 @@
 """Serve batched ANN queries against a saved GRNND index.
 
     PYTHONPATH=src python -m repro.launch.serve --index /tmp/sift.idx.npz \
-        [--batches 8] [--ef 48]
+        [--batches 8] [--ef 48] [--backend pallas] [--visited hashed] \
+        [--visited-cap 512] [--shards 4]
+
+`--backend` selects the kernel path of the fused expansion step
+(`kernels/search_expand.py`; off-TPU "pallas" degrades to interpret mode).
+`--visited hashed` swaps the dense (Q, N) visited bitmask for the O(Q·H)
+per-query open-addressed table — the memory-flat serving configuration
+(DESIGN.md §6).  `--shards K` shards the query batch over the first K
+devices via `core.distributed.distributed_search` (bitwise-identical to
+the single-device search; on a CPU box force host devices first with
+XLA_FLAGS=--xla_force_host_platform_device_count=K).
 """
 from __future__ import annotations
 
@@ -13,29 +23,75 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import brute_force_knn, recall_at_k
-from repro.core.search import search
+from repro.core.distributed import distributed_search
+from repro.core.search import medoid, search
 from repro.data import synthetic
+from repro.kernels import ops
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--index", required=True)
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--ef", type=int, default=48)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for the search "
+                         "(default: current REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--visited", default="dense",
+                    choices=["dense", "hashed"],
+                    help="visited-set representation")
+    ap.add_argument("--visited-cap", type=int, default=None,
+                    help="hashed-table slots per query "
+                         "(default: core.search.default_visited_cap(ef))")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard query batches over this many devices "
+                         "(0 = single-device search)")
     args = ap.parse_args()
+
+    if args.visited_cap is not None and args.visited != "hashed":
+        ap.error("--visited-cap only applies with --visited hashed "
+                 "(dense mode would silently ignore it)")
+    if args.shards > len(jax.devices()):
+        ap.error(f"--shards {args.shards} exceeds the {len(jax.devices())} "
+                 "available device(s); on a CPU box force host devices with "
+                 f"XLA_FLAGS=--xla_force_host_platform_device_count={args.shards}")
+
+    if args.backend is not None:
+        ops.set_backend(args.backend)
 
     blob = np.load(args.index)
     x = jnp.asarray(blob["x"])
     ids = jnp.asarray(blob["ids"])
+    entry = medoid(x)
+
+    mesh = None
+    if args.shards > 0:
+        mesh = jax.make_mesh((args.shards,), ("data",),
+                             devices=jax.devices()[:args.shards])
+        # replicate the index across the mesh ONCE; the per-batch
+        # device_put inside distributed_search then no-ops on x/ids
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        x = jax.device_put(x, rep)
+        ids = jax.device_put(ids, rep)
+        entry = jax.device_put(entry, rep)
+
+    def run_batch(q):
+        kw = dict(k=args.k, ef=args.ef, entry=entry, visited=args.visited,
+                  visited_cap=args.visited_cap)
+        if mesh is None:
+            return search(x, ids, q, **kw)
+        return distributed_search(mesh, ("data",), x, ids, q, **kw)
 
     lat, recs = [], []
     for b in range(args.batches + 1):
         q = synthetic.queries_from(jax.random.PRNGKey(100 + b), x,
                                    args.batch_size)
         t0 = time.perf_counter()
-        res = search(x, ids, q, k=args.k, ef=args.ef)
+        res = run_batch(q)
         res.ids.block_until_ready()
         dt = time.perf_counter() - t0
         if b == 0:
@@ -46,7 +102,9 @@ def main():
 
     qps = args.batch_size / (sum(lat) / len(lat))
     print(f"qps={qps:.0f}  p50={sorted(lat)[len(lat)//2]*1e3:.1f}ms  "
-          f"recall@{args.k}={sum(recs)/len(recs):.3f}")
+          f"recall@{args.k}={sum(recs)/len(recs):.3f}  "
+          f"backend={ops.effective_backend()}  visited={args.visited}  "
+          f"shards={max(args.shards, 1)}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@ import textwrap
 
 import pytest
 
+# Subprocess multi-device build (~14 s) — nightly tier.
+pytestmark = pytest.mark.slow
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,73 @@
+"""Query-sharded distributed_search: bitwise parity with single-device.
+
+Locks the DESIGN.md §6.4 contract — searches are embarrassingly parallel
+over queries, so any shard count must return bitwise-identical results —
+for both visited representations, including the query-padding path
+(Q not divisible by the shard count).  Same forced-host-device subprocess
+pattern as tests/test_distributed_build.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+# Subprocess with 8 forced host devices (~15 s) — nightly tier.
+pytestmark = pytest.mark.slow
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import grnnd, distributed
+    from repro.core.search import search
+    from repro.data import synthetic
+
+    x = synthetic.make_preset(jax.random.PRNGKey(0), "tiny", 600)
+    q = synthetic.queries_from(jax.random.PRNGKey(1), x, 100)  # 100 % 8 != 0
+    cfg = grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16)
+    pool = grnnd.build_graph(jax.random.PRNGKey(2), x, cfg)
+    mesh = jax.make_mesh((8,), ("data",))
+
+    out = {}
+    for vis in ("dense", "hashed"):
+        ref = search(x, pool.ids, q, k=10, ef=32, visited=vis)
+        got = distributed.distributed_search(
+            mesh, ("data",), x, pool.ids, q, k=10, ef=32, visited=vis)
+        out[vis] = {
+            "ids": np.array_equal(np.asarray(ref.ids), np.asarray(got.ids)),
+            "dists": np.array_equal(np.asarray(ref.dists),
+                                    np.asarray(got.dists)),
+            "n_expanded": np.array_equal(np.asarray(ref.n_expanded),
+                                         np.asarray(got.n_expanded)),
+            "shape_ok": got.ids.shape == ref.ids.shape,
+        }
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_search_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.mark.parametrize("visited", ["dense", "hashed"])
+def test_sharded_search_bitwise_parity(dist_search_results, visited):
+    res = dist_search_results[visited]
+    assert res["shape_ok"]       # pad rows sliced back off
+    assert res["ids"]
+    assert res["dists"]
+    assert res["n_expanded"]

@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Full per-arch smoke sweep: the heaviest module (~70 s) — nightly tier.
+pytestmark = pytest.mark.slow
+
 from repro.configs import ALL_ARCHS, reduced
 from repro.configs.base import ArchConfig
 from repro.models import attention as A

@@ -11,6 +11,9 @@ import textwrap
 
 import pytest
 
+# Subprocess with 8 forced host devices (~12 s) — nightly tier.
+pytestmark = pytest.mark.slow
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import grnnd, pools, recall
 from repro.core.search import search
 from repro.data import synthetic
+from repro.kernels import ops
 
 
 @settings(deadline=None, max_examples=10)
@@ -83,6 +84,69 @@ def test_reverse_edges_preserve_invariants(seed, rho):
     for v in range(96):
         valid = ids[v][ids[v] >= 0]
         assert len(valid) == len(set(valid.tolist()))
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    b=st.integers(1, 8),
+    w=st.integers(1, 40),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topr_merge_output_invariants(b, w, r, seed):
+    """topr_merge output is sorted ascending, deduplicated, and packed:
+    no -1 slot ever precedes a valid id (the beam merge in core/search.py
+    relies on all three)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    ids = np.asarray(jax.random.randint(k1, (b, w), -1, 16))
+    lut = np.asarray(jnp.abs(jax.random.normal(k2, (16,))))
+    dists = np.where(ids >= 0, lut[np.clip(ids, 0, None)], np.inf)
+
+    oi, od = ops.topr_merge(jnp.asarray(ids), jnp.asarray(dists), r)
+    oi, od = np.asarray(oi), np.asarray(od)
+    assert oi.shape == (b, r)
+    for row in range(b):
+        valid_mask = oi[row] >= 0
+        valid = oi[row][valid_mask]
+        assert len(valid) == len(set(valid.tolist()))           # dedup
+        dv = od[row][valid_mask]
+        assert np.all(np.diff(dv) >= -1e-7)                     # sorted
+        assert np.all(np.isfinite(dv))
+        # packed: once a -1 appears, every later slot is -1
+        if not np.all(valid_mask):
+            first_empty = int(np.argmin(valid_mask))
+            assert not np.any(valid_mask[first_empty:])
+        assert np.all(np.isinf(od[row][~valid_mask]))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    n=st.integers(2, 48),
+    p=st.integers(1, 12),
+    cap=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stage_request_matrix_cap_and_parity(n, p, cap, seed):
+    """The (N, P) fused-round staging respects the per-destination cap and
+    is exactly group_requests on the row-major flattened matrices."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    dst = jax.random.randint(k1, (n, p), -1, n)
+    src = jax.random.randint(k2, (n, p), 0, n)
+    dist = jnp.abs(jax.random.normal(k3, (n, p)))
+
+    ids, dists = pools.stage_request_matrix(dst, src, dist, n, cap)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ids.shape == (n, cap)
+    for row in range(n):
+        valid = ids[row][ids[row] >= 0]
+        assert len(valid) <= cap                                # cap held
+        assert len(valid) == len(set(valid.tolist()))           # unique
+        assert row not in valid                                 # no self
+    flat = pools.Requests(dst=dst.reshape(-1), src=src.reshape(-1),
+                          dist=dist.reshape(-1))
+    ids2, dists2 = pools.group_requests(flat, n, cap)
+    np.testing.assert_array_equal(ids, np.asarray(ids2))
+    np.testing.assert_array_equal(dists, np.asarray(dists2))
 
 
 def test_merge_idempotent():

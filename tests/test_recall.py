@@ -1,0 +1,62 @@
+"""End-to-end recall regression suite (PR CI fast tier).
+
+Build + search on seeded synthetic data against `brute_force_knn` ground
+truth, with fixed recall@10 floors per construction order and visited-set
+representation — so future kernel/search changes cannot silently degrade
+graph *or* traversal quality.  Thresholds sit ~0.04 under the currently
+measured values (disordered 0.90, ascending 0.96 on this config/seed) to
+absorb benign PRNG/jax-version drift while still catching real
+regressions.
+"""
+import jax
+import pytest
+
+from repro.core import grnnd, recall
+from repro.core.search import search
+from repro.data import synthetic
+
+EF = 48
+K = 10
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    x = synthetic.make_preset(jax.random.PRNGKey(0), "sift-like", 1200)
+    q = synthetic.queries_from(jax.random.PRNGKey(1), x, 128)
+    gt = recall.brute_force_knn(x, q, K)
+    return x, q, gt
+
+
+@pytest.fixture(scope="module")
+def graphs(dataset):
+    x, _, _ = dataset
+    out = {}
+    for order in ("disordered", "ascending"):
+        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16,
+                                order=order)
+        out[order] = grnnd.build_graph(jax.random.PRNGKey(2), x, cfg)
+    return out
+
+
+@pytest.mark.parametrize("order,floor", [
+    ("disordered", 0.86),
+    ("ascending", 0.92),
+])
+@pytest.mark.parametrize("visited", ["dense", "hashed"])
+def test_recall_regression(dataset, graphs, order, floor, visited):
+    x, q, gt = dataset
+    res = search(x, graphs[order].ids, q, k=K, ef=EF, visited=visited)
+    rec = recall.recall_at_k(res.ids, gt)
+    assert rec >= floor, (order, visited, rec)
+
+
+def test_hashed_matches_dense_recall(dataset, graphs):
+    """Acceptance bound: the hashed visited set (default cap) may not cost
+    more than 0.01 recall vs the dense baseline at equal ef."""
+    x, q, gt = dataset
+    ids = graphs["disordered"].ids
+    r_dense = recall.recall_at_k(
+        search(x, ids, q, k=K, ef=EF, visited="dense").ids, gt)
+    r_hashed = recall.recall_at_k(
+        search(x, ids, q, k=K, ef=EF, visited="hashed").ids, gt)
+    assert r_hashed >= r_dense - 0.01, (r_dense, r_hashed)

@@ -1,0 +1,155 @@
+"""Parity suite for the production query path (DESIGN.md §6).
+
+Three contracts:
+
+  * hashed-visited search is BITWISE identical to the dense-visited
+    reference whenever `visited_cap >= N` — identity-mod hashing is
+    injective there, so no collisions and no capacity misses exist;
+  * at realistic caps (the `default_visited_cap` serving configuration)
+    recall matches the dense baseline to within 1e-3 — collisions only
+    cause harmless re-expansions, never false skips;
+  * the fused `search_expand` kernel (interpret mode) matches the ref.py
+    oracle bitwise, per the same common-jit-context convention as
+    tests/test_rng_round.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grnnd, recall
+from repro.core.search import _table_insert, search
+from repro.data import synthetic
+from repro.kernels import ops, ref
+from repro.kernels.search_expand import search_expand_pallas
+
+
+@pytest.fixture(scope="module")
+def built():
+    x = synthetic.make_preset(jax.random.PRNGKey(0), "tiny", 900)
+    q = synthetic.queries_from(jax.random.PRNGKey(1), x, 96)
+    gt = recall.brute_force_knn(x, q, 10)
+    cfg = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16)
+    pool = grnnd.build_graph(jax.random.PRNGKey(2), x, cfg)
+    return x, pool.ids, q, gt
+
+
+# ---------------------------------------------------------------------------
+# hashed visited set vs the dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ef", [16, 48])
+def test_hashed_bitwise_identical_at_full_cap(built, ef):
+    """visited_cap >= N: zero collisions -> the exact same trajectory."""
+    x, ids, q, _ = built
+    d = search(x, ids, q, k=10, ef=ef, visited="dense")
+    h = search(x, ids, q, k=10, ef=ef, visited="hashed",
+               visited_cap=x.shape[0])
+    np.testing.assert_array_equal(np.asarray(d.ids), np.asarray(h.ids))
+    np.testing.assert_array_equal(np.asarray(d.dists), np.asarray(h.dists))
+    np.testing.assert_array_equal(np.asarray(d.n_expanded),
+                                  np.asarray(h.n_expanded))
+
+
+def test_hashed_recall_at_realistic_cap(built):
+    """Default serving cap (O(ef), independent of N): recall within 1e-3."""
+    x, ids, q, gt = built
+    r_d = recall.recall_at_k(
+        search(x, ids, q, k=10, ef=48, visited="dense").ids, gt)
+    r_h = recall.recall_at_k(
+        search(x, ids, q, k=10, ef=48, visited="hashed").ids, gt)
+    assert abs(r_d - r_h) <= 1e-3, (r_d, r_h)
+
+
+def test_hashed_tiny_cap_still_correct_distances(built):
+    """A deliberately undersized table (many capacity misses) may cost
+    work, but every returned (id, dist) pair must still be exact."""
+    x, ids, q, _ = built
+    res = search(x, ids, q[:8], k=5, ef=16, visited="hashed", visited_cap=32)
+    r_ids, r_d = np.asarray(res.ids), np.asarray(res.dists)
+    xs, qs = np.asarray(x), np.asarray(q[:8])
+    for qi in range(8):
+        row = r_ids[qi][r_ids[qi] >= 0]
+        assert len(row) == len(set(row.tolist()))  # merge dedup held
+        for slot, v in enumerate(r_ids[qi]):
+            if v < 0:
+                continue
+            want = float(((qs[qi] - xs[v]) ** 2).sum())
+            np.testing.assert_allclose(r_d[qi, slot], want, rtol=1e-4,
+                                       atol=1e-5)
+
+
+def test_table_insert_then_probe_roundtrip():
+    """Inserted ids are found; non-inserted ids are not (no false
+    positives even under heavy collision load)."""
+    key = jax.random.PRNGKey(3)
+    ids = jax.random.randint(key, (4, 12), -1, 200)
+    tab = _table_insert(jnp.full((4, 64), -1, jnp.int32), ids)
+    pos = ref.visited_probe_positions(ids, 64)
+    vals = np.asarray(tab)[np.arange(4)[:, None, None], np.asarray(pos)]
+    found = np.any(vals == np.asarray(ids)[..., None], axis=-1)
+    table_np = np.asarray(tab)
+    for qi in range(4):
+        stored = set(table_np[qi][table_np[qi] >= 0].tolist())
+        for v, f in zip(np.asarray(ids)[qi], found[qi]):
+            if v < 0:
+                continue
+            # found <-> actually stored (misses are allowed, lies are not)
+            assert f == (int(v) in stored)
+
+
+# ---------------------------------------------------------------------------
+# fused expand kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def _expand_case(seed, qn, r, n, d, h, fill):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    x = synthetic.vector_dataset(k1, n, d, n_clusters=max(2, n // 16))
+    q = synthetic.queries_from(k2, x, qn)
+    nbrs = jax.random.randint(k3, (qn, r), -1, n)
+    tab = jnp.full((qn, h), -1, jnp.int32)
+    if fill:  # insert half the neighbor ids so probes hit and miss
+        tab = _table_insert(tab, jnp.where(
+            jax.random.bernoulli(k4, 0.5, (qn, r)), nbrs, -1))
+    return x, q, nbrs, tab
+
+
+@pytest.mark.parametrize("qn,r,n,d,h,fill", [
+    (8, 10, 64, 12, 32, True),
+    (5, 7, 50, 33, 16, True),    # D not lane-aligned, odd shapes
+    (4, 8, 40, 16, 1, False),    # H = 1: the dense-path dummy table
+    (3, 6, 30, 8, 3, True),      # H < PROBES: multi-wrap probe windows
+    (3, 6, 30, 8, 256, True),    # sparse table, wide H
+])
+def test_expand_matches_oracle(qn, r, n, d, h, fill):
+    x, q, nbrs, tab = _expand_case(11, qn, r, n, d, h, fill)
+    got = search_expand_pallas(x, q, nbrs, tab, interpret=True)
+    want = jax.jit(ref.search_expand_ref)(x, q, nbrs, tab)
+    for name, g, w in zip(("ids", "dists", "fresh"), got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_expand_all_invalid_rows_inert():
+    x, q, _, tab = _expand_case(13, 4, 6, 32, 8, 16, False)
+    nbrs = jnp.full((4, 6), -1, jnp.int32)
+    ids, d, fresh = search_expand_pallas(x, q, nbrs, tab, interpret=True)
+    assert bool(jnp.all(ids == -1))
+    assert bool(jnp.all(jnp.isinf(d)))
+    assert not bool(jnp.any(fresh))
+
+
+def test_search_backend_parity_end_to_end(built):
+    """Interpret-backend search (fused kernels) == ref-backend search,
+    bitwise, for both visited representations."""
+    x, ids, q, _ = built
+    for visited in ("dense", "hashed"):
+        with ops.backend("ref"):
+            a = search(x, ids, q[:16], k=5, ef=16, visited=visited)
+        with ops.backend("interpret"):
+            b = search(x, ids, q[:16], k=5, ef=16, visited=visited)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids),
+                                      err_msg=visited)
+        np.testing.assert_array_equal(np.asarray(a.dists),
+                                      np.asarray(b.dists), err_msg=visited)

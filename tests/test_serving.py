@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Engine decode loops (~13 s) — nightly tier.
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_arch, reduced
 from repro.core.grnnd import GRNNDConfig
 from repro.models import transformer as T

@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# Training-loop/checkpoint integration (~30 s) — nightly tier.
+pytestmark = pytest.mark.slow
+
 from repro.checkpoint import checkpoint as CKPT
 from repro.configs import get_arch, reduced
 from repro.data import pipeline as PIPE
