@@ -13,8 +13,6 @@ import time
 import zlib
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import grnnd, recall as R
 from repro.core.search import search

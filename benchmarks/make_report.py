@@ -16,7 +16,7 @@ from repro.configs.base import SHAPES
 def dryrun_table(rdir: pathlib.Path, mesh: str) -> str:
     # memory_analysis() values are already PER-DEVICE (SPMD module)
     lines = [
-        f"| arch | shape | status | compile_s | arg GiB/dev | temp GiB/dev | HLO coll GiB/dev |",
+        "| arch | shape | status | compile_s | arg GiB/dev | temp GiB/dev | HLO coll GiB/dev |",
         "|---|---|---|---|---|---|---|",
     ]
     archs = list_archs() + ["grnnd-ann"]

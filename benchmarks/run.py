@@ -1,41 +1,131 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Figures 5-9 reproduce the paper's
-experiment families at reduced CPU scale; `roofline` reads the dry-run
-artifacts (run `python -m repro.launch.dryrun --all` first to refresh).
+experiment families at reduced CPU scale; fig10 measures the dynamic index
+under churn (beyond the paper); `roofline` reads the dry-run artifacts (run
+`python -m repro.launch.dryrun --all` first to refresh).
+
+``--smoke`` is the CI perf-trajectory seed (ISSUE 3): a tiny-preset,
+interpret-mode-kernel run of the representative families (fig5 build path,
+fig6 query path, fig10 dynamic path, analytic roofline) written to a JSON
+artifact and validated against the row schema — so every PR leaves a
+comparable breadcrumb and a schema drift fails the build instead of
+silently corrupting the trajectory.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5 roofline]
+    PYTHONPATH=src python -m benchmarks.run --smoke --out BENCH_smoke.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
 import time
 
-ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "roofline")
+ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "roofline")
+
+# the artifact contract: bump ONLY with a matching update to every consumer
+# of the perf trajectory (EXPERIMENTS.md §Tables tooling)
+SMOKE_SCHEMA = 1
+SMOKE_N = 192
+_ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
+# families the smoke artifact must always cover (one per serving surface)
+SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "roofline")
+
+
+def _module(name: str):
+    if name == "fig5":
+        from benchmarks import fig5_construction as m
+    elif name == "fig6":
+        from benchmarks import fig6_qps as m
+    elif name == "fig7":
+        from benchmarks import fig7_order as m
+    elif name == "fig8":
+        from benchmarks import fig8_rho as m
+    elif name == "fig9":
+        from benchmarks import fig9_iters as m
+    elif name == "fig10":
+        from benchmarks import fig10_churn as m
+    elif name == "roofline":
+        from benchmarks import roofline as m
+    else:
+        return None
+    return m
+
+
+def parse_row(row: str) -> dict:
+    """Split one CSV row into the artifact dict; raises ValueError on drift."""
+    parts = row.split(",", 2)
+    if len(parts) != 3:
+        raise ValueError(f"row is not name,us_per_call,derived: {row!r}")
+    name, us, derived = parts
+    if not _ROW_RE.match(name):
+        raise ValueError(f"row name outside the fig*/roofline namespace: "
+                         f"{name!r}")
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def validate_rows(parsed: list[dict]) -> None:
+    """Schema gate for the smoke artifact: every family present, no ERROR
+    rows (a crashed benchmark must fail CI, not upload a hole)."""
+    for fam in SMOKE_FAMILIES:
+        if not any(p["name"].startswith(fam + "/") for p in parsed):
+            raise ValueError(f"smoke artifact is missing family {fam!r}")
+    errors = [p["name"] for p in parsed if "/ERROR" in p["name"]]
+    if errors:
+        raise ValueError(f"benchmark families crashed: {errors}")
+
+
+def run_smoke(out_path: str) -> None:
+    """Tiny-preset interpret-kernel run -> validated JSON artifact."""
+    rows: list[str] = []
+    calls = (
+        ("fig5", lambda m: m.run(n_seq=SMOKE_N, backend="interpret")),
+        ("fig6", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig10", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("roofline", lambda m: m.run()),
+    )
+    for name, call in calls:
+        t0 = time.time()
+        try:
+            rows.extend(call(_module(name)))
+        except Exception as e:
+            rows.append(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    parsed = [parse_row(r) for r in rows]
+    payload = {"schema": SMOKE_SCHEMA, "n": SMOKE_N, "backend": "interpret",
+               "rows": parsed}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {len(parsed)} rows -> {out_path}", file=sys.stderr)
+    validate_rows(parsed)  # raises (non-zero exit) on drift
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help=f"subset of {ALL}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-preset interpret-mode run -> JSON artifact "
+                         "(the CI perf-trajectory seed)")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="smoke artifact path (only with --smoke)")
     args = ap.parse_args()
-    which = args.only or ALL
 
+    if args.smoke:
+        if args.only:
+            ap.error("--only does not apply to --smoke (fixed family set)")
+        run_smoke(args.out)
+        return
+
+    which = args.only or ALL
     print("name,us_per_call,derived")
     for name in which:
         t0 = time.time()
-        if name == "fig5":
-            from benchmarks import fig5_construction as m
-        elif name == "fig6":
-            from benchmarks import fig6_qps as m
-        elif name == "fig7":
-            from benchmarks import fig7_order as m
-        elif name == "fig8":
-            from benchmarks import fig8_rho as m
-        elif name == "fig9":
-            from benchmarks import fig9_iters as m
-        elif name == "roofline":
-            from benchmarks import roofline as m
-        else:
+        m = _module(name)
+        if m is None:
             print(f"# unknown benchmark {name}", file=sys.stderr)
             continue
         try:

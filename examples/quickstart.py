@@ -5,7 +5,6 @@
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import GRNNDConfig, build_graph, brute_force_knn, recall_at_k
 from repro.core.search import search

@@ -10,7 +10,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import GRNNDConfig, build_graph, brute_force_knn, recall_at_k
 from repro.core.search import search
@@ -49,7 +48,6 @@ def main():
         res.ids.block_until_ready()
         dt = time.perf_counter() - t0
         if b == 0:
-            dt_compile = dt
             continue  # first batch pays compile; measure steady state
         lat.append(dt)
         gt = brute_force_knn(x, q, 10)

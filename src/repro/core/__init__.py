@@ -6,13 +6,17 @@ from repro.core.pools import (
     Pool, Requests, empty_pool, init_random, insert_requests, merge_into)
 from repro.core.search import SearchResult, search, medoid, default_visited_cap
 from repro.core.recall import brute_force_knn, recall_at_k
+from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.distributed import (
-    sharded_build_graph, make_sharded_builder, distributed_search)
+    sharded_build_graph, make_sharded_builder, distributed_search,
+    sharded_apply_requests)
 
 __all__ = [
     "GRNNDConfig", "build_graph", "build_graph_with_stats", "update_round",
     "reverse_edge_round", "Pool", "Requests", "empty_pool", "init_random",
     "insert_requests", "merge_into", "SearchResult", "search", "medoid",
     "default_visited_cap", "brute_force_knn", "recall_at_k",
+    "DynamicConfig", "DynamicIndex",
     "sharded_build_graph", "make_sharded_builder", "distributed_search",
+    "sharded_apply_requests",
 ]

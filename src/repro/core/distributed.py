@@ -54,9 +54,17 @@ def _local_round_requests(x, ids_loc, dists_loc, row0, key, cfg: GRNNDConfig):
 
 
 def _filter_to_local(req: P.Requests, row0, n_loc) -> P.Requests:
-    """Re-base request destinations to local row indices; drop non-local."""
+    """Re-base request destinations to local row indices; drop non-local.
+
+    Self-inserts are dropped HERE, while dst and src are still in the same
+    global id space; after re-basing, dst is shard-local and src global, so
+    the staging-time dst == src filter would both miss true self-inserts
+    and falsely kill genuine requests whose global src happens to equal the
+    local row index — downstream staging must run with drop_self=False.
+    """
     dst_local = req.dst - row0
-    ok = (req.dst >= 0) & (dst_local >= 0) & (dst_local < n_loc)
+    ok = ((req.dst >= 0) & (dst_local >= 0) & (dst_local < n_loc)
+          & (req.dst != req.src))
     return P.Requests(
         dst=jnp.where(ok, dst_local, -1),
         src=req.src,
@@ -143,7 +151,8 @@ def make_sharded_builder(
         surv_ids = jnp.where(killed, -1, ids_loc)
         surv_dists = jnp.where(killed, jnp.inf, dists_loc)
         local_red = _filter_to_local(red_all, row0, n_loc)
-        staged_i, staged_d = P.group_requests(local_red, n_loc, cfg.cap)
+        staged_i, staged_d = P.group_requests(local_red, n_loc, cfg.cap,
+                                              drop_self=False)
         ids2 = jnp.concatenate([surv_ids, staged_i], axis=-1)
         d2 = jnp.concatenate([surv_dists, staged_d], axis=-1)
         return ops.topr_merge(ids2, d2, r)
@@ -196,23 +205,27 @@ def sharded_build_graph(
 @functools.lru_cache(maxsize=32)
 def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                        max_steps: int, visited: str, visited_cap: int | None,
-                       backend: str):
+                       has_valid: bool, backend: str):
     """One jitted shard_map per (mesh, axes, search-config) — cached so
     repeated serving batches reuse the compiled executable instead of
-    re-tracing per call.  `backend` is unused in the body but part of the
-    cache key: the inner search dispatches kernels at trace time (same
-    contract as search._search_impl)."""
+    re-tracing per call.  `has_valid` selects the tombstone-masked variant
+    (an extra replicated operand); the static path keeps the original
+    maskless trace.  `backend` is unused in the body but part of the cache
+    key: the inner search dispatches kernels at trace time (same contract
+    as search._search_impl)."""
     del backend
     qspec = PSpec(axes)
     rspec = PSpec()
 
-    def body(x_r, graph_r, q_loc, entry_r):
+    def body(x_r, graph_r, q_loc, entry_r, *valid_r):
         return search(x_r, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
-                      entry=entry_r, visited=visited, visited_cap=visited_cap)
+                      entry=entry_r, visited=visited, visited_cap=visited_cap,
+                      valid=valid_r[0] if has_valid else None)
 
+    in_specs = (rspec, rspec, qspec, rspec) + ((rspec,) if has_valid else ())
     return jax.jit(shard_map(
         body, mesh=mesh,
-        in_specs=(rspec, rspec, qspec, rspec),
+        in_specs=in_specs,
         out_specs=SearchResult(qspec, qspec, qspec),
         check_vma=False,
     ))
@@ -231,6 +244,7 @@ def distributed_search(
     entry: jnp.ndarray | None = None,
     visited: str = "dense",
     visited_cap: int | None = None,
+    valid: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Query-sharded beam search over the mesh.
 
@@ -239,6 +253,11 @@ def distributed_search(
     on its query slice, so results are bitwise-identical to the single-device
     search for any shard count (no cross-shard state exists).  Queries are
     padded to a multiple of the shard count and the pad rows sliced off.
+
+    `valid` is the dynamic index's tombstone mask (core/dynamic.py).  It is
+    replicated here like x and the graph (query sharding); under VERTEX
+    sharding (the build layout) the mask shards with the pools instead —
+    each shard owns the validity of its own vertex rows.
     """
     axes = tuple(axes)
     n_shards = 1
@@ -248,7 +267,7 @@ def distributed_search(
         visited_cap = None  # unused; normalized to one cache entry (as search())
 
     if entry is None:
-        entry = medoid(x)  # once, replicated — not once per shard
+        entry = medoid(x, valid)  # once, replicated — not once per shard
 
     qn = queries.shape[0]
     pad = (-qn) % n_shards
@@ -257,20 +276,71 @@ def distributed_search(
             [queries, jnp.broadcast_to(queries[:1], (pad, queries.shape[1]))])
 
     sharded = _sharded_search_fn(mesh, axes, k, ef, max_steps, visited,
-                                 visited_cap, ops.effective_backend())
+                                 visited_cap, valid is not None,
+                                 ops.effective_backend())
     x = jax.device_put(x, NamedSharding(mesh, PSpec()))
     graph_ids = jax.device_put(graph_ids, NamedSharding(mesh, PSpec()))
     queries = jax.device_put(queries, NamedSharding(mesh, PSpec(axes)))
-    res = sharded(x, graph_ids, queries, entry)
+    extra = ()
+    if valid is not None:
+        extra = (jax.device_put(valid, NamedSharding(mesh, PSpec())),)
+    res = sharded(x, graph_ids, queries, entry, *extra)
     if pad:
         res = SearchResult(res.ids[:qn], res.dists[:qn], res.n_expanded[:qn])
     return res
 
 
+def sharded_apply_requests(
+    mesh: Mesh,
+    axes: Sequence[str],
+    pool: P.Pool,
+    req: P.Requests,
+    cap: int | None = None,
+) -> P.Pool:
+    """Route a flat insertion-request batch to the owning vertex shards.
+
+    The dynamic-index mutation primitive under the build's vertex-sharded
+    layout (DESIGN.md §7): request destinations are GLOBAL vertex ids; each
+    shard all-gathers the (tiny) triples, filters to its own row range with
+    the same `_filter_to_local` re-basing the build rounds use, and merges
+    through the local staging pipeline.  Determinism: identical to the
+    single-device `pools.insert_requests` for any shard count, because the
+    merge is the same order-free topr_merge dataflow.
+
+    The tombstone mask needs no exchange at all — validity is a per-vertex
+    property, so each shard owns the (n_loc,) slice of the mask for its own
+    rows and deletes are a purely local scatter.
+    """
+    axes = tuple(axes)
+    vspec = PSpec(axes)
+    rspec = PSpec()
+    cap = cap if cap is not None else pool.r
+
+    def body(ids_loc, dists_loc, dst, src, dist):
+        n_loc, r = ids_loc.shape
+        sidx = jnp.int32(0)
+        for a in axes:
+            sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+        row0 = sidx * n_loc
+        local = _filter_to_local(P.Requests(dst, src, dist), row0, n_loc)
+        staged_i, staged_d = P.group_requests(local, n_loc, cap,
+                                              drop_self=False)
+        ids2 = jnp.concatenate([ids_loc, staged_i], axis=-1)
+        d2 = jnp.concatenate([dists_loc, staged_d], axis=-1)
+        return ops.topr_merge(ids2, d2, r)
+
+    ids, dists = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(vspec, vspec, rspec, rspec, rspec),
+        out_specs=(vspec, vspec),
+        check_vma=False,
+    ))(pool.ids, pool.dists, req.dst, req.src, req.dist)
+    return P.Pool(ids, dists)
+
+
 def _sharded_reverse(mesh, axes, cfg: GRNNDConfig, pool: P.Pool) -> P.Pool:
     """Reverse-edge sampling with cross-shard routing (all-gather exchange)."""
     vspec = PSpec(axes)
-    rspec = PSpec()
 
     def body(ids_loc, dists_loc):
         n_loc, r = ids_loc.shape
@@ -297,7 +367,8 @@ def _sharded_reverse(mesh, axes, cfg: GRNNDConfig, pool: P.Pool) -> P.Pool:
             dist=jax.lax.all_gather(req.dist, axes, tiled=True),
         )
         local = _filter_to_local(req_all, row0, n_loc)
-        staged_i, staged_d = P.group_requests(local, n_loc, cfg.cap)
+        staged_i, staged_d = P.group_requests(local, n_loc, cfg.cap,
+                                              drop_self=False)
         ids2 = jnp.concatenate([ids_loc, staged_i], axis=-1)
         d2 = jnp.concatenate([dists_loc, staged_d], axis=-1)
         return ops.topr_merge(ids2, d2, r)

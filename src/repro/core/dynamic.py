@@ -1,0 +1,381 @@
+"""Dynamic GRNND index: online insert/delete with incremental refinement.
+
+The paper builds a static graph once (Alg. 3) and stops at construction +
+query; real serving corpora churn.  `DynamicIndex` wraps a built `Pool` and
+keeps it searchable under mutation (DESIGN.md §7):
+
+  * **batched insert** — new vertices get seed neighbors from the existing
+    beam search (`core.search.search` over the current graph), emit
+    symmetric insertion requests through the same `group_requests` /
+    `topr_merge` dataflow as the build, then run a configurable number of
+    *localized* propagation rounds: the fused RNG pair evaluation
+    (`grnnd._pair_requests_chunk`) over the gathered touched-vertex
+    frontier only — O(F·P·D) distance work for F touched vertices instead
+    of the full build round's O(N·P·D);
+  * **delete via tombstones** — an (N,) validity mask threaded through the
+    fused `search_expand` kernel (and its ref.py oracle): a dead vertex is
+    excluded from traversal entirely, so queries see the deletion
+    immediately while the graph arrays stay put;
+  * **compaction** — once tombstones exceed `compact_threshold`, `compact()`
+    physically drops dead rows, remaps neighbor ids, and re-sorts pools;
+    because tombstones were already invisible to the search, compaction
+    preserves search results exactly (tests/test_dynamic.py);
+  * **capacity doubling** — vectors, pools, validity, and labels live in
+    power-of-two padded buffers, so repeated inserts amortize reallocation
+    and the jit caches (seed search, request staging, localized rounds)
+    stay warm across growth steps.
+
+External identity is a monotone int64 **label** (returned by `insert`,
+accepted by `delete`, reported by `search`): internal slot ids move on
+compaction, labels never do.  `labels[:size]` is strictly increasing by
+construction (initial arange, appends increase, compaction keeps order),
+which makes label -> slot lookup a binary search.
+
+The vertex-sharded distributed variant routes insertion requests to the
+owning shard with the same all-gather + local-filter exchange as the build
+(`core.distributed.sharded_apply_requests`); the tombstone mask shards
+with the pools.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pools as P
+from repro.core.grnnd import GRNNDConfig, _pair_requests_chunk
+from repro.core.search import SearchResult, medoid, search
+from repro.kernels import ops
+
+
+class DynamicConfig(NamedTuple):
+    """Mutation-path knobs (the build-time knobs stay in GRNNDConfig)."""
+    seed_k: int = 8              # seed neighbors per inserted vertex
+    seed_ef: int = 64            # beam width of the seed search
+    refine_rounds: int = 2       # localized propagation rounds per insert batch
+    pairs_per_vertex: int = 32   # sampled slot pairs per frontier vertex
+    incoming_cap: int | None = None   # staged insertions per vertex per round
+    compact_threshold: float = 0.25   # tombstone fraction that triggers compact()
+    min_capacity: int = 64            # smallest padded buffer
+
+
+def _pow2_capacity(need: int, floor: int) -> int:
+    cap = max(floor, 1)
+    while cap < need:
+        cap *= 2
+    return cap
+
+
+@functools.partial(jax.jit, static_argnames=("r", "cap"))
+def _apply_seed_requests(ids, dists, new_slots, seed_ids, seed_d, *, r, cap):
+    """Write the inserted vertices' seed pools and their symmetric edges.
+
+    The new rows' pools are the deduped top-r of the seed search results;
+    the reverse direction (new vertex into each seed neighbor's pool) goes
+    through the standard request staging — the exact WARP_INSERT-analogue
+    dataflow the build uses, so insertion order cannot matter.
+    """
+    b, sk = seed_ids.shape
+    row_i, row_d = ops.topr_merge(seed_ids, seed_d, r)
+    ids = ids.at[new_slots].set(row_i)
+    dists = dists.at[new_slots].set(row_d)
+    req = P.Requests(
+        dst=seed_ids.reshape(-1),
+        src=jnp.repeat(new_slots, sk),
+        dist=seed_d.reshape(-1),
+    )
+    return P.insert_requests(P.Pool(ids, dists), req, cap=cap)
+
+
+@functools.partial(jax.jit, static_argnames=("pairs", "cap", "backend"))
+def _localized_round(x, ids, dists, frontier, key, *, pairs, cap, backend):
+    """One propagation round restricted to the touched-vertex frontier.
+
+    `frontier` is a fixed-size (F,) id vector (-1 = inactive pad); only its
+    rows are gathered and pair-evaluated — the O(N·P·D) distance stage of a
+    full build round shrinks to O(F·P·D).  Redirects and kills then merge
+    through the order-free staging pipeline, so the result is exactly a
+    build round in which every non-frontier vertex sampled zero pairs.
+
+    `backend` is unused in the body but part of the jit key (kernels
+    dispatch at trace time — same contract as grnnd._build_graph_impl).
+    """
+    del backend
+    n, r = ids.shape
+    ok = frontier >= 0
+    fr = jnp.clip(frontier, 0)
+    ids_c = jnp.where(ok[:, None], ids[fr], -1)
+    dists_c = jnp.where(ok[:, None], dists[fr], jnp.inf)
+    cfg = GRNNDConfig(r=r, pairs_per_vertex=pairs, order="disordered")
+    redirect, killed = _pair_requests_chunk(x, ids_c, dists_c, None, key, cfg)
+
+    # OR-scatter the frontier kill mask back to full rows (duplicate
+    # frontier entries combine, exactly like same-round kills in the build)
+    kill_full = jnp.zeros((n, r), jnp.int32).at[fr].max(
+        (killed & ok[:, None]).astype(jnp.int32), mode="drop").astype(bool)
+    surv_ids = jnp.where(kill_full, -1, ids)
+    surv_dists = jnp.where(kill_full, jnp.inf, dists)
+    staged_i, staged_d = P.group_requests(redirect, n, cap)
+    return P.merge_into(P.Pool(surv_ids, surv_dists), staged_i, staged_d)
+
+
+@jax.jit
+def _masked_knn_dists(x, valid, queries):
+    d = ops.pairwise_sqdist(queries, x)
+    return jnp.where(valid[None, :], d, jnp.inf)
+
+
+class DynamicIndex:
+    """A mutable ANN index over padded device buffers.
+
+    State (capacity C, pool width R):
+      x      (C, D) f32   — vectors; rows >= size are zero pads
+      pool   (C, R)       — neighbor ids/dists (ids are internal slots)
+      valid  (C,)   bool  — False for tombstones AND unallocated pads
+      labels (C,)   i64   — external label per slot (host array, -1 = pad)
+
+    `size` is the allocated prefix (live + tombstoned), `n_live` the live
+    count.  `rounds_run` counts localized propagation rounds — the unit the
+    <25%-of-rebuild acceptance bound is stated in (ISSUE 3 / fig10).
+    """
+
+    def __init__(self, x: jnp.ndarray, pool: P.Pool,
+                 cfg: DynamicConfig = DynamicConfig(),
+                 key: jax.Array | None = None):
+        n, d = x.shape
+        assert pool.ids.shape[0] == n
+        self.cfg = cfg
+        self.r = pool.r
+        self.size = n
+        self.n_live = n
+        self.rounds_run = 0
+        self._key = key if key is not None else jax.random.PRNGKey(0x0d11)
+        self._entry: jnp.ndarray | None = None
+
+        cap = _pow2_capacity(n, cfg.min_capacity)
+        self.x = jnp.zeros((cap, d), jnp.float32).at[:n].set(
+            x.astype(jnp.float32))
+        self.pool = P.Pool(
+            ids=jnp.full((cap, self.r), -1, jnp.int32).at[:n].set(pool.ids),
+            dists=jnp.full((cap, self.r), jnp.inf, jnp.float32).at[:n].set(
+                pool.dists),
+        )
+        self.valid = jnp.zeros((cap,), bool).at[:n].set(True)
+        self.labels = np.full((cap,), -1, np.int64)
+        self.labels[:n] = np.arange(n, dtype=np.int64)
+        self._next_label = n
+
+    # -- bookkeeping ------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def tombstone_fraction(self) -> float:
+        return 1.0 - self.n_live / max(self.size, 1)
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    def _fold_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def entry(self) -> jnp.ndarray:
+        if self._entry is None:
+            self._entry = medoid(self.x, self.valid)
+        return self._entry
+
+    def _ensure_capacity(self, need: int) -> None:
+        cap = self.capacity
+        if need <= cap:
+            return
+        new_cap = _pow2_capacity(need, cap)
+        grow = new_cap - cap
+        self.x = jnp.pad(self.x, ((0, grow), (0, 0)))
+        self.pool = P.Pool(
+            ids=jnp.pad(self.pool.ids, ((0, grow), (0, 0)),
+                        constant_values=-1),
+            dists=jnp.pad(self.pool.dists, ((0, grow), (0, 0)),
+                          constant_values=jnp.inf),
+        )
+        self.valid = jnp.pad(self.valid, (0, grow))
+        self.labels = np.concatenate(
+            [self.labels, np.full((grow,), -1, np.int64)])
+
+    # -- mutation ---------------------------------------------------------
+
+    def insert(self, xs: jnp.ndarray) -> np.ndarray:
+        """Insert a batch of vectors; returns their (B,) external labels.
+
+        Seed neighbors come from the existing search beam; the symmetric
+        edges and `cfg.refine_rounds` localized propagation rounds then
+        stitch the batch into the RNG structure without touching the
+        untouched bulk of the graph.
+        """
+        xs = jnp.asarray(xs, jnp.float32)
+        b = xs.shape[0]
+        assert b > 0 and xs.shape[1] == self.x.shape[1]
+        cfg = self.cfg
+        cap = cfg.incoming_cap if cfg.incoming_cap is not None else self.r
+        seed_k = min(cfg.seed_k, self.r)
+
+        if self.n_live > 0:
+            # seed search runs against the pre-insert graph (tombstones and
+            # pad rows are excluded by the validity mask)
+            res = search(self.x, self.pool.ids, xs,
+                         k=seed_k, ef=max(cfg.seed_ef, seed_k),
+                         entry=self.entry(), valid=self.valid)
+            seed_ids, seed_d = res.ids, res.dists
+
+        self._ensure_capacity(self.size + b)
+        new_slots = jnp.arange(self.size, self.size + b, dtype=jnp.int32)
+
+        if self.n_live == 0:
+            # a fully-deleted (or fully-compacted-away) index has no graph
+            # to seed from: bootstrap the batch off ITSELF — exact kNN
+            # within the batch, mapped to the new slots — so the refinement
+            # rounds start from a connected neighborhood instead of leaving
+            # the corpus permanently unreachable
+            k_boot = min(seed_k, max(b - 1, 1))
+            d = ops.pairwise_sqdist(xs, xs)
+            d = d.at[jnp.arange(b), jnp.arange(b)].set(jnp.inf)
+            vals, nidx = jax.lax.top_k(-d, k_boot)
+            seed_d = -vals
+            seed_ids = jnp.where(jnp.isfinite(seed_d), new_slots[nidx], -1)
+        self.x = self.x.at[new_slots].set(xs)
+        self.valid = self.valid.at[new_slots].set(True)
+        self.labels[self.size:self.size + b] = np.arange(
+            self._next_label, self._next_label + b, dtype=np.int64)
+        out_labels = self.labels[self.size:self.size + b].copy()
+        self._next_label += b
+
+        self.pool = _apply_seed_requests(
+            self.pool.ids, self.pool.dists, new_slots,
+            seed_ids, seed_d, r=self.r, cap=cap)
+
+        # localized refinement: the frontier is the inserted vertices plus
+        # every vertex that received a symmetric edge — a fixed-size vector
+        # so repeated equal-sized batches reuse one compiled round
+        frontier = jnp.concatenate([new_slots, seed_ids.reshape(-1)])
+        backend = ops.effective_backend()
+        for _ in range(cfg.refine_rounds):
+            self.pool = _localized_round(
+                self.x, self.pool.ids, self.pool.dists, frontier,
+                self._fold_key(), pairs=cfg.pairs_per_vertex, cap=cap,
+                backend=backend)
+            self.rounds_run += 1
+
+        self.size += b
+        self.n_live += b
+        self._entry = None
+        return out_labels
+
+    def delete(self, labels: np.ndarray) -> int:
+        """Tombstone the given external labels; returns the number removed.
+
+        Queries stop returning (and routing through) the vertices
+        immediately; the rows are physically reclaimed by `compact()`,
+        which auto-triggers once `tombstone_fraction` exceeds
+        `cfg.compact_threshold`.  Labels this index never issued raise
+        KeyError; already-deleted labels — including ones whose rows a
+        past compaction physically reclaimed — are a no-op, so
+        at-least-once delete pipelines can retry safely.
+        """
+        lab = np.atleast_1d(np.asarray(labels, np.int64))
+        unknown = (lab < 0) | (lab >= self._next_label)
+        if unknown.any():
+            raise KeyError(f"unknown labels: {lab[unknown][:8].tolist()}")
+        if self.size == 0:
+            return 0  # fully-compacted-away index: everything is a no-op
+        table = self.labels[:self.size]
+        slots = np.searchsorted(table, lab)
+        # issued labels absent from the table were compacted away: no-op
+        present = ((slots < self.size)
+                   & (table[np.minimum(slots, self.size - 1)] == lab))
+        slots = np.unique(slots[present])
+        alive = np.asarray(self.valid)[slots]
+        slots = slots[alive]
+        if slots.size:
+            self.valid = self.valid.at[jnp.asarray(slots)].set(False)
+            self.n_live -= int(slots.size)
+            self._entry = None
+        if self.tombstone_fraction > self.cfg.compact_threshold:
+            self.compact()
+        return int(slots.size)
+
+    def compact(self) -> None:
+        """Drop tombstoned rows, remap neighbor ids, re-sort pools.
+
+        Tombstones are already invisible to the search (the validity mask
+        removes them from traversal), so compaction is a pure relabeling:
+        search results — in label space — are preserved exactly.  The
+        cached entry vertex is remapped rather than recomputed, keeping
+        even float-level trajectories identical.
+        """
+        size, r = self.size, self.r
+        keep = np.asarray(self.valid[:size])
+        kept = np.nonzero(keep)[0]
+        n_new = int(kept.size)
+        new_of_old = np.full((size,), -1, np.int32)
+        new_of_old[kept] = np.arange(n_new, dtype=np.int32)
+
+        ids_old = np.asarray(self.pool.ids[:size])[kept]      # (n_new, R)
+        d_old = np.asarray(self.pool.dists[:size])[kept]
+        nbr_ok = (ids_old >= 0) & keep[np.clip(ids_old, 0, size - 1)]
+        mapped = np.where(nbr_ok, new_of_old[np.clip(ids_old, 0, size - 1)],
+                          -1).astype(np.int32)
+        d_new = np.where(mapped >= 0, d_old, np.inf).astype(np.float32)
+
+        cap = _pow2_capacity(max(n_new, 1), self.cfg.min_capacity)
+        d = self.x.shape[1]
+        x_new = jnp.zeros((cap, d), jnp.float32).at[:n_new].set(
+            self.x[jnp.asarray(kept)])
+        # dead neighbors leave holes mid-row: re-establish the sorted,
+        # empties-at-end pool invariant with the same merge primitive
+        row_i, row_d = ops.topr_merge(jnp.asarray(mapped), jnp.asarray(d_new),
+                                      r)
+        self.pool = P.Pool(
+            ids=jnp.full((cap, r), -1, jnp.int32).at[:n_new].set(row_i),
+            dists=jnp.full((cap, r), jnp.inf, jnp.float32).at[:n_new].set(
+                row_d),
+        )
+        self.x = x_new
+        self.valid = jnp.zeros((cap,), bool).at[:n_new].set(True)
+        labels_new = np.full((cap,), -1, np.int64)
+        labels_new[:n_new] = self.labels[:size][keep]
+        self.labels = labels_new
+        if self._entry is not None:
+            e = int(self._entry)
+            self._entry = (jnp.int32(new_of_old[e])
+                           if 0 <= e < size and new_of_old[e] >= 0 else None)
+        self.size = n_new
+        self.n_live = n_new
+
+    # -- queries ----------------------------------------------------------
+
+    def search(self, queries: jnp.ndarray, *, k: int = 10, ef: int = 64,
+               max_steps: int = 512, visited: str = "dense",
+               visited_cap: int | None = None) -> SearchResult:
+        """Beam search over the live graph; result ids are external labels."""
+        res = search(self.x, self.pool.ids, queries, k=k, ef=ef,
+                     max_steps=max_steps, entry=self.entry(),
+                     visited=visited, visited_cap=visited_cap,
+                     valid=self.valid)
+        ids = np.asarray(res.ids)
+        lab = np.where(ids >= 0, self.labels[np.clip(ids, 0, None)],
+                       np.int64(-1))
+        return SearchResult(jnp.asarray(lab), res.dists, res.n_expanded)
+
+    def exact_knn(self, queries: jnp.ndarray, k: int) -> jnp.ndarray:
+        """Brute-force ground truth over the LIVE corpus, in label space."""
+        d = _masked_knn_dists(self.x, self.valid, jnp.asarray(queries))
+        vals, idx = jax.lax.top_k(-d, k)
+        idx = np.asarray(idx)
+        lab = np.where(np.isfinite(np.asarray(-vals)),
+                       self.labels[np.clip(idx, 0, None)], np.int64(-1))
+        return jnp.asarray(lab)

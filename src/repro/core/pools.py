@@ -98,9 +98,18 @@ def concat_requests(*reqs: Requests) -> Requests:
     )
 
 
-def group_requests(req: Requests, n: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Stage a flat Requests batch into per-destination buffers."""
-    return _stage(req.dst, req.src, req.dist, n, cap)
+def group_requests(req: Requests, n: int, cap: int,
+                   drop_self: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage a flat Requests batch into per-destination buffers.
+
+    `drop_self=False` skips the dst == src self-insert filter — for the
+    distributed paths, whose destinations are RE-BASED to shard-local row
+    indices while sources stay global: comparing those spaces would both
+    miss true self-inserts and drop genuine cross-space coincidences, so
+    the self filter runs in global space (`distributed._filter_to_local`)
+    before re-basing instead.
+    """
+    return _stage(req.dst, req.src, req.dist, n, cap, drop_self=drop_self)
 
 
 def stage_request_matrix(
@@ -116,15 +125,18 @@ def stage_request_matrix(
     return _stage(dst.reshape(-1), src.reshape(-1), dist.reshape(-1), n, cap)
 
 
-def _stage(dst, src_in, dist_in, n: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _stage(dst, src_in, dist_in, n: int, cap: int,
+           drop_self: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Stage requests into per-destination buffers: -> ids/dists (N, cap).
 
     Deterministic replacement for atomic concurrent insertion: requests are
     ordered dist-minor / dst-major with two stable sorts, ranked within their
     destination segment, and the first `cap` per destination scattered.
-    Self-inserts (dst == src) and inactive requests are dropped.
+    Self-inserts (dst == src; only meaningful when both live in the same id
+    space — see group_requests) and inactive requests are dropped.
     """
-    dst = jnp.where(dst == src_in, -1, dst)
+    if drop_self:
+        dst = jnp.where(dst == src_in, -1, dst)
 
     # dedup identical (dst, src) requests so duplicates cannot crowd out
     # distinct candidates at the capacity rank below: sort src-minor /

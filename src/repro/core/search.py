@@ -44,10 +44,21 @@ class SearchResult(NamedTuple):
     n_expanded: jnp.ndarray  # (Q,) int32 — distance computations proxy
 
 
-def medoid(x: jnp.ndarray) -> jnp.ndarray:
-    """Entry point: vertex nearest to the dataset centroid."""
-    c = jnp.mean(x, axis=0, keepdims=True)
-    return jnp.argmin(ops.pairwise_sqdist(c, x)[0]).astype(jnp.int32)
+def medoid(x: jnp.ndarray, valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Entry point: vertex nearest to the dataset centroid.
+
+    With a `valid` mask (dynamic index: tombstones + unallocated padded
+    rows, core/dynamic.py), both the centroid and the argmin are restricted
+    to live rows, so the entry is always a live vertex.
+    """
+    if valid is None:
+        c = jnp.mean(x, axis=0, keepdims=True)
+        return jnp.argmin(ops.pairwise_sqdist(c, x)[0]).astype(jnp.int32)
+    v = valid.astype(jnp.float32)
+    c = (jnp.sum(x * v[:, None], axis=0)
+         / jnp.maximum(jnp.sum(v), 1.0))[None, :]
+    d = jnp.where(valid, ops.pairwise_sqdist(c, x)[0], jnp.inf)
+    return jnp.argmin(d).astype(jnp.int32)
 
 
 def default_visited_cap(ef: int) -> int:
@@ -95,6 +106,7 @@ def _search_impl(
     graph_ids: jnp.ndarray,
     queries: jnp.ndarray,
     entry: jnp.ndarray,
+    valid: jnp.ndarray | None,
     *,
     k: int,
     ef: int,
@@ -112,6 +124,11 @@ def _search_impl(
     qrows = jnp.arange(q, dtype=jnp.int32)
 
     d_entry = ops.rowwise_sqdist(queries, jnp.broadcast_to(x[entry], queries.shape))
+    if valid is not None:
+        # a dead entry contributes nothing; every later insertion into the
+        # beam is already validity-filtered inside search_expand, so the
+        # beam can never contain a tombstoned vertex
+        d_entry = jnp.where(valid[entry], d_entry, jnp.inf)
     cand_ids = jnp.full((q, ef), -1, jnp.int32).at[:, 0].set(entry)
     cand_dists = jnp.full((q, ef), jnp.inf, jnp.float32).at[:, 0].set(d_entry)
     expanded = jnp.zeros((q, ef), bool)
@@ -143,11 +160,12 @@ def _search_impl(
         nbrs = graph_ids[jnp.clip(sel_id, 0)]                      # (Q, R)
         nbrs = jnp.where(active[:, None] & (nbrs >= 0), nbrs, -1)
 
-        # fused: gather neighbor vectors, query->neighbor distances, and the
-        # visited probe in one pass (dense mode probes the empty dummy table
-        # and refines `fresh` with the exact bitmask below)
+        # fused: gather neighbor vectors, query->neighbor distances, the
+        # visited probe, and the tombstone-validity probe in one pass (dense
+        # mode probes the empty dummy table and refines `fresh` with the
+        # exact bitmask below)
         nbrs, dq, fresh = ops.search_expand(
-            x, queries, nbrs, vstate if lookup is None else lookup)
+            x, queries, nbrs, vstate if lookup is None else lookup, valid)
         if visited == "dense":
             seen = vstate[qrows[:, None], jnp.clip(nbrs, 0)]
             fresh = fresh & ~seen
@@ -194,6 +212,7 @@ def search(
     entry: jnp.ndarray | None = None,
     visited: str = "dense",
     visited_cap: int | None = None,
+    valid: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Search the graph for the k nearest vertices to each query row.
 
@@ -201,17 +220,24 @@ def search(
     bitmask) or "hashed" (per-query `visited_cap`-slot open-addressed table,
     O(Q·H) memory independent of N — the serving configuration at scale).
     `visited_cap` defaults to `default_visited_cap(ef)`.
+
+    `valid` is the dynamic index's (N,) vertex-validity mask (tombstoned or
+    not-yet-allocated rows are False, core/dynamic.py): dead vertices are
+    excluded from traversal entirely — never expanded, scored, or returned
+    — so the result set is exactly what a search over the physically
+    compacted graph would produce.  None (the static-index default) keeps
+    the original path bit-for-bit.
     """
     assert ef >= k
     assert visited in ("dense", "hashed"), visited
     assert visited_cap is None or visited_cap > 0, visited_cap
     if entry is None:
-        entry = medoid(x)
+        entry = medoid(x, valid)
     if visited == "dense":
         cap = 0  # unused; normalized so it never fragments the jit cache
     else:
         cap = visited_cap if visited_cap is not None else default_visited_cap(ef)
-    return _search_impl(x, graph_ids, queries, entry,
+    return _search_impl(x, graph_ids, queries, entry, valid,
                         k=k, ef=ef, max_steps=max_steps,
                         visited=visited, visited_cap=cap,
                         backend=ops.effective_backend())

@@ -18,10 +18,8 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
 
-from repro.configs.base import ArchConfig
 
 
 def _axsize(mesh: Mesh, ax) -> int:

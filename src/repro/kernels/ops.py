@@ -97,16 +97,19 @@ def topr_merge(ids: jnp.ndarray, dists: jnp.ndarray, r: int):
     return topr_merge_pallas(ids, dists, r, interpret=_interpret())
 
 
-def search_expand(x, queries, nbrs, table):
+def search_expand(x, queries, nbrs, table, valid=None):
     """Fused beam-search expansion step: (ids, dists, fresh).
 
     See ref.search_expand_ref for semantics; the pallas path fuses the
-    neighbor-vector gather, query->neighbor distances, and the visited-table
-    probe into one VMEM-resident pass (kernels/search_expand.py).
+    neighbor-vector gather, query->neighbor distances, the visited-table
+    probe, and the optional tombstone-validity probe into one VMEM-resident
+    pass (kernels/search_expand.py).  `valid` is the dynamic index's (N,)
+    vertex-validity mask (None = all live, the static-index path).
     """
     if get_backend() == "ref":
-        return _ref.search_expand_ref(x, queries, nbrs, table)
-    return search_expand_pallas(x, queries, nbrs, table, interpret=_interpret())
+        return _ref.search_expand_ref(x, queries, nbrs, table, valid)
+    return search_expand_pallas(x, queries, nbrs, table, valid,
+                                interpret=_interpret())
 
 
 def rng_propagation_round(x, ids, dists, si, sj):

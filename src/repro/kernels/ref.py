@@ -114,6 +114,7 @@ def search_expand_ref(
     queries: jnp.ndarray,
     nbrs: jnp.ndarray,
     table: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One fused beam-search expansion step (see kernels/search_expand.py).
 
@@ -123,27 +124,37 @@ def search_expand_ref(
       nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex;
                -1 marks an invalid entry (inactive query / empty slot).
       table:   (Q, H) int32 open-addressed visited table; -1 = empty slot.
+      valid:   optional (N,) bool vertex-validity mask (the dynamic index's
+               tombstone mask, core/dynamic.py).  A neighbor whose vertex is
+               tombstoned is treated exactly like an empty graph slot: it is
+               never expanded, scored, or returned — so a later `compact()`
+               (which physically drops dead vertices and their in-edges)
+               cannot change any search trajectory.  None = all vertices
+               live (the static-index path, bit-identical to the pre-mask
+               kernel).
 
     Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool): the
-    neighbor ids (invalid -> -1), exact squared query->neighbor distances
-    (+inf where invalid), and the freshness mask — valid AND not found in
-    the table's probe window.  False positives are impossible (exact keys);
-    a capacity miss only re-marks an already-visited id as fresh, which the
-    deduplicating beam merge absorbs.
+    neighbor ids (invalid/dead -> -1), exact squared query->neighbor
+    distances (+inf where invalid/dead), and the freshness mask — live AND
+    not found in the table's probe window.  False positives are impossible
+    (exact keys); a capacity miss only re-marks an already-visited id as
+    fresh, which the deduplicating beam merge absorbs.
     """
     q, r = nbrs.shape
-    valid = nbrs >= 0
+    ok = nbrs >= 0
+    if valid is not None:
+        ok = ok & valid.astype(bool)[jnp.clip(nbrs, 0)]
     nv = x[jnp.clip(nbrs, 0).reshape(-1)].reshape(q, r, -1).astype(jnp.float32)
     diff = queries.astype(jnp.float32)[:, None, :] - nv
     d = jnp.sum(diff * diff, axis=-1)
-    d = jnp.where(valid, d, jnp.inf)
+    d = jnp.where(ok, d, jnp.inf)
 
     h = table.shape[1]
     pos = visited_probe_positions(nbrs, h)                    # (Q, R, PL)
     qrows = jnp.arange(q, dtype=jnp.int32)[:, None, None]
     vals = table[qrows, pos]                                  # (Q, R, PL)
     found = jnp.any(vals == nbrs[..., None], axis=-1)
-    return jnp.where(valid, nbrs, -1), d, valid & ~found
+    return jnp.where(ok, nbrs, -1), d, ok & ~found
 
 
 def topr_merge_ref(

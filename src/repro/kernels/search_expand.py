@@ -21,7 +21,12 @@ This kernel fuses the whole step.  Per query q it
      is wrap-extended by PROBES slots outside the kernel, so each id's
      probe window is one contiguous O(PROBES) dynamic slice — membership
      work per id is independent of H — and emits (ids, dists, fresh-mask)
-     in one pass.
+     in one pass;
+  4. applies the optional (N,) vertex-validity mask (the dynamic index's
+     tombstone mask, core/dynamic.py §DESIGN.md §7): each neighbor's
+     validity bit is DMA'd on the same per-row schedule as its vector, and
+     a dead neighbor is reported exactly like an empty graph slot
+     (id -1, dist +inf, not fresh).
 
 The (Q·R, D) gathered-vector and repeated-query intermediates never exist:
 HBM traffic per step drops from ~3·(Q·R·D + Q·D·R) read/write/re-read bytes
@@ -56,14 +61,27 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.ref import HASH_PROBES
 
 
-def _search_expand_kernel(nbrs_pref, xrow_ref, q_ref, nbrs_ref, tab_ref,
-                          ids_ref, d_ref, fresh_ref, vecs_ref,
-                          *, r: int, h: int, probes: int):
-    """Grid: (Q, R). Step (q, rr) DMAs x[nbrs[q, rr]] into vecs row rr; the
-    distance + probe evaluation runs once per query on the final row."""
+def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
+                          r: int, h: int, probes: int, masked: bool):
+    """Grid: (Q, R). Step (q, rr) DMAs x[nbrs[q, rr]] (and, in the masked
+    variant, the neighbor's validity bit) into scratch row rr; the distance
+    + probe evaluation runs once per query on the final row.
+
+    `masked` is a trace-time flag: the static-index path (valid=None)
+    compiles WITHOUT the validity operand, scratch, or per-step DMA — the
+    dynamic feature costs the hot serving loop nothing unless it is used.
+    """
     del nbrs_pref  # consumed by the index_maps
+    if masked:
+        (vrow_ref, q_ref, nbrs_ref, tab_ref,
+         ids_ref, d_ref, fresh_ref, vecs_ref, live_ref) = refs
+    else:
+        (q_ref, nbrs_ref, tab_ref,
+         ids_ref, d_ref, fresh_ref, vecs_ref) = refs
     rr = pl.program_id(1)
     vecs_ref[pl.ds(rr, 1), :] = xrow_ref[...].astype(jnp.float32)
+    if masked:
+        live_ref[pl.ds(rr, 1), :] = vrow_ref[...]
 
     @pl.when(rr == r - 1)
     def _evaluate():
@@ -77,21 +95,29 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, q_ref, nbrs_ref, tab_ref,
 
         diff = vecs - qv                              # (R, D) broadcast
         d = jnp.sum(diff * diff, axis=1).reshape(1, r)
-        valid = nbrs >= 0
-        d = jnp.where(valid, d, jnp.inf)
 
         found = []
+        alive = []
         for j in range(r):                            # R is small: unrolled
             v = nbrs[0, j]
             base = jnp.clip(v, 0) % h
             win = jax.lax.dynamic_slice(tab, (jnp.int32(0), base),
                                         (1, probes))
             found.append(jnp.any(win == v))
+            if masked:
+                alive.append(live_ref[j, 0] != 0)
         found = jnp.stack(found).reshape(1, r)
 
-        ids_ref[...] = jnp.where(valid, nbrs, -1)
+        # a tombstoned neighbor (valid[v] == 0) is indistinguishable from an
+        # empty graph slot: never scored, never returned (ref.py contract)
+        ok = nbrs >= 0
+        if masked:
+            ok = ok & jnp.stack(alive).reshape(1, r)
+        d = jnp.where(ok, d, jnp.inf)
+
+        ids_ref[...] = jnp.where(ok, nbrs, -1)
         d_ref[...] = d
-        fresh_ref[...] = (valid & ~found).astype(jnp.int32)
+        fresh_ref[...] = (ok & ~found).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -100,6 +126,7 @@ def search_expand_pallas(
     queries: jnp.ndarray,
     nbrs: jnp.ndarray,
     table: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
     *,
     interpret: bool = False,
 ):
@@ -111,6 +138,10 @@ def search_expand_pallas(
       nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex,
                -1 = invalid (inactive query or empty graph slot).
       table:   (Q, H) int32 open-addressed visited table, -1 = empty slot.
+      valid:   optional (N,) bool/int32 vertex-validity mask (tombstones,
+               core/dynamic.py).  Stays in HBM next to x; each neighbor's
+               bit rides the same per-row DMA schedule as its vector, so
+               the mask probe adds no extra pass.  None = all live.
 
     Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool) — identical
     to `ref.search_expand_ref`.
@@ -118,6 +149,7 @@ def search_expand_pallas(
     qn, r = nbrs.shape
     n, d = x.shape
     h = table.shape[1]
+    masked = valid is not None  # trace-time: None is a distinct jit trace
     nbrs_safe = jnp.clip(nbrs.astype(jnp.int32), 0, n - 1)
     # wrap-extend the table so every (mod H) probe window is contiguous:
     # ext[base + l] == table[(base + l) % H] for base < H, l < PROBES
@@ -133,11 +165,19 @@ def search_expand_pallas(
     qp = jnp.pad(queries, ((0, 0), (0, pad_d))) if pad_d else queries
     dp = d + pad_d
 
+    # the masked variant adds one (1, 1) validity block riding the same
+    # nb_ref[q, rr] index map as the x-row gather, plus its (R, 1) scratch
+    mask_specs = [pl.BlockSpec((1, 1), lambda q, rr, nb_ref:
+                               (nb_ref[q, rr], 0))] if masked else []
+    mask_scratch = [pltpu.VMEM((r, 1), jnp.int32)] if masked else []
+    mask_ops = ((valid.astype(jnp.int32).reshape(n, 1),) if masked else ())
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,               # nbrs_safe lands as index operand
         grid=(qn, r),
         in_specs=[
             pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (nb_ref[q, rr], 0)),
+        ] + mask_specs + [
             pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, he), lambda q, rr, nb_ref: (q, 0)),
@@ -147,11 +187,11 @@ def search_expand_pallas(
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
         ],
-        scratch_shapes=[pltpu.VMEM((r, dp), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((r, dp), jnp.float32)] + mask_scratch,
     )
     ids, dists, fresh = pl.pallas_call(
         functools.partial(_search_expand_kernel, r=r, h=h,
-                          probes=HASH_PROBES),
+                          probes=HASH_PROBES, masked=masked),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((qn, r), jnp.int32),
@@ -159,5 +199,5 @@ def search_expand_pallas(
             jax.ShapeDtypeStruct((qn, r), jnp.int32),
         ],
         interpret=interpret,
-    )(nbrs_safe, xp, qp, nbrs.astype(jnp.int32), tab_ext)
+    )(nbrs_safe, xp, *mask_ops, qp, nbrs.astype(jnp.int32), tab_ext)
     return ids, dists, fresh.astype(bool)

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --index /tmp/sift.idx.npz \
         [--batches 8] [--ef 48] [--backend pallas] [--visited hashed] \
-        [--visited-cap 512] [--shards 4]
+        [--visited-cap 512] [--shards 4] [--mutable --churn 64]
 
 `--backend` selects the kernel path of the fused expansion step
 (`kernels/search_expand.py`; off-TPU "pallas" degrades to interpret mode).
@@ -12,6 +12,15 @@ per-query open-addressed table — the memory-flat serving configuration
 devices via `core.distributed.distributed_search` (bitwise-identical to
 the single-device search; on a CPU box force host devices first with
 XLA_FLAGS=--xla_force_host_platform_device_count=K).
+
+`--mutable` wraps the loaded index in a `core.dynamic.DynamicIndex` and
+interleaves mutation requests with the query batches: every batch first
+INSERTS `--churn` fresh vectors and DELETES the `--churn` oldest live
+labels (a sliding-window corpus, the workload a static build cannot
+serve), then runs the search batch.  Recall is scored against exact
+brute force over the LIVE corpus, and mutation latency is reported next
+to query throughput.  Compaction auto-triggers on the tombstone
+threshold (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -24,6 +33,8 @@ import numpy as np
 
 from repro.core import brute_force_knn, recall_at_k
 from repro.core.distributed import distributed_search
+from repro.core.dynamic import DynamicConfig, DynamicIndex
+from repro.core.pools import Pool
 from repro.core.search import medoid, search
 from repro.data import synthetic
 from repro.kernels import ops
@@ -49,6 +60,15 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard query batches over this many devices "
                          "(0 = single-device search)")
+    ap.add_argument("--mutable", action="store_true",
+                    help="serve through a DynamicIndex with per-batch "
+                         "insert/delete churn (see module docstring)")
+    ap.add_argument("--churn", type=int, default=None,
+                    help="vectors inserted AND deleted per batch "
+                         "(only with --mutable; default 64)")
+    ap.add_argument("--refine-rounds", type=int, default=None,
+                    help="localized propagation rounds per insert batch "
+                         "(only with --mutable; default 2)")
     args = ap.parse_args()
 
     if args.visited_cap is not None and args.visited != "hashed":
@@ -58,6 +78,12 @@ def main():
         ap.error(f"--shards {args.shards} exceeds the {len(jax.devices())} "
                  "available device(s); on a CPU box force host devices with "
                  f"XLA_FLAGS=--xla_force_host_platform_device_count={args.shards}")
+    if args.shards > 0 and args.mutable:
+        ap.error("--mutable currently serves single-device (the mutation "
+                 "path is not query-sharded); drop --shards")
+    if not args.mutable and (args.churn is not None
+                             or args.refine_rounds is not None):
+        ap.error("--churn/--refine-rounds only apply with --mutable")
 
     if args.backend is not None:
         ops.set_backend(args.backend)
@@ -65,6 +91,11 @@ def main():
     blob = np.load(args.index)
     x = jnp.asarray(blob["x"])
     ids = jnp.asarray(blob["ids"])
+
+    if args.mutable:
+        serve_mutable(args, x, jnp.asarray(blob["dists"]), ids)
+        return
+
     entry = medoid(x)
 
     mesh = None
@@ -105,6 +136,54 @@ def main():
           f"recall@{args.k}={sum(recs)/len(recs):.3f}  "
           f"backend={ops.effective_backend()}  visited={args.visited}  "
           f"shards={max(args.shards, 1)}")
+
+
+def serve_mutable(args, x, dists, ids):
+    """--mutable: per-batch insert/delete churn through a DynamicIndex.
+
+    Only batch 0 is excluded as the compile batch: a mid-run capacity
+    doubling or auto-compaction changes buffer shapes and retraces the
+    jits, and those seconds land in the reported latencies — faithful for
+    an ops view of steady-state serving (stalls included), but use
+    benchmarks/fig10_churn.py (which warms an exact replay) for clean
+    mutation-throughput numbers.
+    """
+    rounds = args.refine_rounds if args.refine_rounds is not None else 2
+    idx = DynamicIndex(x, Pool(ids, dists),
+                       DynamicConfig(refine_rounds=rounds))
+    churn = args.churn if args.churn is not None else 64
+    mut_lat, lat, recs = [], [], []
+    for b in range(args.batches + 1):
+        kb = jax.random.PRNGKey(100 + b)
+        t0 = time.perf_counter()
+        if churn > 0:
+            idx.insert(synthetic.queries_from(kb, x, churn, noise=0.1))
+            live = idx.labels[:idx.size][np.asarray(idx.valid[:idx.size])]
+            idx.delete(live[:churn])  # oldest live: a sliding-window corpus
+        t_mut = time.perf_counter() - t0
+
+        q = synthetic.queries_from(jax.random.fold_in(kb, 1), x,
+                                   args.batch_size)
+        t0 = time.perf_counter()
+        res = idx.search(q, k=args.k, ef=args.ef, visited=args.visited,
+                         visited_cap=args.visited_cap)
+        res.dists.block_until_ready()
+        dt = time.perf_counter() - t0
+        if b == 0:
+            continue  # compile batch
+        mut_lat.append(t_mut)
+        lat.append(dt)
+        recs.append(recall_at_k(res.ids, idx.exact_knn(q, args.k)))
+
+    qps = args.batch_size / (sum(lat) / len(lat))
+    mut_per_s = 2 * churn / (sum(mut_lat) / len(mut_lat)) if churn else 0.0
+    print(f"qps={qps:.0f}  p50={sorted(lat)[len(lat)//2]*1e3:.1f}ms  "
+          f"recall@{args.k}={sum(recs)/len(recs):.3f}  "
+          f"mutations/s={mut_per_s:.0f}  churn={churn}  "
+          f"live={idx.n_live}  tomb={idx.tombstone_fraction:.2f}  "
+          f"rounds={idx.rounds_run}  "
+          f"backend={ops.effective_backend()}  visited={args.visited}  "
+          f"mutable=1")
 
 
 if __name__ == "__main__":

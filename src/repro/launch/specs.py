@@ -11,8 +11,7 @@ paper's technique on the production mesh).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -218,7 +217,6 @@ GRNND_SHAPES = {
 def _grnnd_cell(shape_name: str, mesh: Mesh):
     from repro.core import distributed as D
     from repro.core.grnnd import GRNNDConfig
-    from repro.core.pools import Pool
 
     spec = GRNND_SHAPES[shape_name]
     n, d = spec["n"], spec["d"]

@@ -18,7 +18,6 @@ the input_specs level; everything downstream is real.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import grnnd
-from repro.core.pools import Pool
 from repro.core.search import search
 
 

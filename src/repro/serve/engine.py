@@ -7,7 +7,6 @@ are jit-compiled once per (batch, s_max) bucket.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

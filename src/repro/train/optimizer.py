@@ -31,7 +31,8 @@ class AdamWConfig(NamedTuple):
 
 
 def init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         mu=jax.tree.map(zeros, params),
@@ -51,8 +52,8 @@ def schedule(cfg: AdamWConfig, step):
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def apply(cfg: AdamWConfig, state: AdamWState, params, grads):

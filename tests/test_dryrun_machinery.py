@@ -47,7 +47,7 @@ def dryrun_results():
     proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
                           capture_output=True, text=True, timeout=1200)
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
     return json.loads(line[len("RESULT"):])
 
 

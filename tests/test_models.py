@@ -1,7 +1,5 @@
 """Model correctness: attention equivalences, SSD oracle, MoE dispatch,
 prefill/decode cache consistency, per-arch smoke tests (deliverable f)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -7,7 +7,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import grnnd, pools, recall
+from repro.core import grnnd, pools
 from repro.core.search import search
 from repro.data import synthetic
 from repro.kernels import ops

@@ -14,8 +14,6 @@ def mesh16():
     devs = jax.devices()
     if len(devs) < 1:
         pytest.skip("no devices")
-    import numpy as np
-    from jax.sharding import Mesh
     # single CPU device replicated into an abstract mesh is not allowed;
     # use AbstractMesh for pure spec logic
     from repro.compat import abstract_mesh
@@ -67,7 +65,6 @@ class TestParamSpecs:
 
 class TestPolicy:
     def _policy(self, arch, shape="train_4k"):
-        from repro.launch.mesh import make_production_mesh
         # policy only reads mesh.shape; fake it
         class FakeMesh:
             shape = {"data": 16, "model": 16}

@@ -115,7 +115,10 @@ class TestCompression:
         np.testing.assert_allclose(total / 50, g["w"], atol=1e-3)
 
     def test_compressed_psum_matches_mean(self):
-        import subprocess, sys, os, textwrap
+        import os
+        import subprocess
+        import sys
+        import textwrap
         script = textwrap.dedent("""
             import os
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -166,7 +169,9 @@ class TestFaultTolerance:
         assert c.elastic_mesh_shape(chips_per_host=4, model_parallelism=4) \
             == (8, 4)
         clock[0] = 2.0
-        c.heartbeat(0); c.heartbeat(1); c.heartbeat(2)
+        c.heartbeat(0)
+        c.heartbeat(1)
+        c.heartbeat(2)
         c.check_failures()
         # 3 hosts * 4 chips = 12 chips; TP=4 -> data=3 -> pow2 -> 2
         assert c.elastic_mesh_shape(4, 4) == (2, 4)
