@@ -90,14 +90,16 @@ def eval_recall(x, graph_ids, q, gt, ef: int = EF):
 
 def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3,
                  backend: str | None = None, visited: str = "dense",
-                 visited_cap: int | None = None):
+                 visited_cap: int | None = None, rescore=None):
     """Compile-excluded search wall time -> (result, QPS).
 
     `backend`/`visited`/`visited_cap` select the query-path configuration
     (kernels/search_expand.py + hashed visited set); defaults reproduce the
-    ambient-backend dense-bitmask search.
+    ambient-backend dense-bitmask search.  `x` may be a VectorStore and
+    `rescore` the fp32 tier (the precision ladder, DESIGN.md §8).
     """
-    kw = dict(k=K, ef=ef, visited=visited, visited_cap=visited_cap)
+    kw = dict(k=K, ef=ef, visited=visited, visited_cap=visited_cap,
+              rescore=rescore)
     with backend_scope(backend):
         res = search(x, graph_ids, q, **kw)        # compile + warm
         res.ids.block_until_ready()
@@ -111,5 +113,20 @@ def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3,
     return res, qps
 
 
-def row(name: str, seconds: float, derived: str) -> str:
-    return f"{name},{seconds * 1e6:.1f},{derived}"
+def row(name: str, seconds: float, derived: str, *,
+        precision: str = "fp32", bytes_per_vector: float = 0.0) -> str:
+    """One harness CSV row.
+
+    Every row carries the traversal-tier `precision=` and `bpv=` (bytes
+    per stored vector; 0.0 where no vector storage is involved, e.g.
+    analytic cells) so the perf trajectory can distinguish dtype
+    regressions from algorithmic ones — benchmarks/run.py validates both
+    fields on the smoke artifact (SMOKE_SCHEMA 2).
+    """
+    return (f"{name},{seconds * 1e6:.1f},{derived}"
+            f" precision={precision} bpv={bytes_per_vector:.1f}")
+
+
+def fp32_bpv(x) -> float:
+    """Traversal-tier bytes/vector of a plain fp32 dataset."""
+    return 4.0 * x.shape[1]

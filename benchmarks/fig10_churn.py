@@ -91,7 +91,8 @@ def run(n: int = 2000, backend: str | None = None,
             f"inserts_per_s={ins_per_s:.0f} "
             f"rounds={dyn.rounds_run} vs_rebuild={rebuild_rounds} "
             f"round_frac={dyn.rounds_run / rebuild_rounds:.2f} "
-            f"t_rebuild={t_full:.2f}s backend={eff}"))
+            f"t_rebuild={t_full:.2f}s backend={eff}",
+            bytes_per_vector=C.fp32_bpv(x)))
 
         # --- delete 10% + compact: recall vs live gt, exact preservation ---
         dels = np.random.default_rng(0).choice(
@@ -107,7 +108,8 @@ def run(n: int = 2000, backend: str | None = None,
         rows.append(C.row(
             f"fig10/{name}/delete-compact{tag}", 0.0,
             f"recall_live={rec_del:.3f} tombstoned={n_ins} "
-            f"compact_exact={int(exact)} live={dyn.n_live}"))
+            f"compact_exact={int(exact)} live={dyn.n_live}",
+            bytes_per_vector=C.fp32_bpv(x)))
     return rows
 
 

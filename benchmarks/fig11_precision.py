@@ -1,0 +1,142 @@
+"""Fig 11 (beyond the paper): the precision ladder — bytes/vector, build
+time, and QPS-at-recall per storage rung (DESIGN.md §8).
+
+For each dataset the SAME pipeline runs at fp32, bf16, and int8 vector
+storage: the graph is BUILT on the quantized store (every init/round
+distance in storage-precision space, dequant fused into the kernels) and
+QUERIED through the same unified search, with the quantized rungs
+re-ranking their final ef candidates against the fp32 tier (the rescoring
+pass, core/search.py).  Derived columns record recall with and without
+rescoring, so the artifact shows both what quantized traversal alone
+loses and what the two-tier layout recovers.
+
+Row names are `fig11/<dataset>/<precision><backend-tag>/ef<ef>`; every
+row carries the schema-validated `precision=`/`bpv=` fields
+(benchmarks/run.py SMOKE_SCHEMA 2).
+
+    PYTHONPATH=src python benchmarks/fig11_precision.py [--backend ref]
+    PYTHONPATH=src python benchmarks/fig11_precision.py --smoke
+
+`--smoke` is the acceptance gate: a tiny interpret-mode sweep whose rows
+are parsed and validated in-process (all three precisions present, bf16
+bytes/vector ≥ 2x and int8 ≥ 4x below fp32) — non-zero exit on any
+violation, so CI catches a broken ladder, not just a slow one.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig11_precision.py`
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import common as C
+from repro.core import grnnd, vecstore as VS
+from repro.core.recall import recall_at_k
+from repro.core.search import search
+
+SMOKE_N = 192
+
+
+def run(n: int = 3000, backend: str | None = None) -> list[str]:
+    """`backend` applies to build AND search (both run on the quantized
+    store); recall evaluation keeps exact fp32 ground truth."""
+    eff, tag = C.resolve_backend(backend)
+    interp = eff == "interpret"
+    if interp:
+        n = min(n, C.INTERPRET_MAX_N)
+    nq, repeats, ef = (48, 1, 32) if interp else (200, 2, C.EF)
+
+    rows = []
+    datasets = list(C.bench_datasets(n=n, nq=nq).items())
+    if interp:
+        # interpret mode steps kernel grids from Python: one dataset keeps
+        # the 3-precision sweep inside the smoke-job budget (coverage of
+        # the other presets comes from the full-scale run of this file)
+        datasets = datasets[:1]
+    for name, (x, q, gt) in datasets:
+        cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                                pairs_per_vertex=24)
+        for prec in VS.PRECISIONS:
+            store = VS.encode(x, prec)
+            xt = x if prec == "fp32" else store
+            rescore = None if prec == "fp32" else x
+            with C.backend_scope(backend):
+                pool, t_build = C.timed_build(xt, cfg)
+            res, qps = C.timed_search(xt, pool.ids, q, ef=ef,
+                                      repeats=repeats, backend=backend,
+                                      rescore=rescore)
+            rec = recall_at_k(res.ids, gt)
+            if rescore is None:
+                rec_raw = rec
+            else:  # untimed: only the traversal-space recall is wanted
+                with C.backend_scope(backend):
+                    raw = search(xt, pool.ids, q, k=C.K, ef=ef)
+                rec_raw = recall_at_k(raw.ids, gt)
+            bpv = store.bytes_per_vector()
+            rows.append(C.row(
+                f"fig11/{name}/{prec}{tag}/ef{ef}", 1.0 / qps,
+                f"recall={rec:.3f} recall_norescore={rec_raw:.3f} "
+                f"qps={qps:.0f} build_s={t_build:.2f} "
+                f"rescore={int(rescore is not None)} backend={eff}",
+                precision=prec, bytes_per_vector=bpv))
+    return rows
+
+
+def validate_precision_rows(parsed: list[dict]) -> None:
+    """The fig11 acceptance gate (shared with benchmarks/run.py).
+
+    Raises ValueError unless every precision rung is present and the
+    bytes/vector reductions hold: bf16 ≥ 2x and int8 ≥ 4x below the fp32
+    rows of the same dataset (scale/offset overhead excluded — it is
+    amortized over N and reported separately by VectorStore).
+    """
+    fig11 = [p for p in parsed if p["name"].startswith("fig11/")]
+    by_ds: dict[str, dict[str, float]] = {}
+    for p in fig11:
+        ds = p["name"].split("/")[1]
+        by_ds.setdefault(ds, {})[p["precision"]] = p["bytes_per_vector"]
+    if not by_ds:
+        raise ValueError("no fig11 rows to validate")
+    for ds, prec_bpv in by_ds.items():
+        missing = set(VS.PRECISIONS) - set(prec_bpv)
+        if missing:
+            raise ValueError(f"fig11/{ds} is missing precisions {missing}")
+        fp32 = prec_bpv["fp32"]
+        if not (fp32 > 0 and prec_bpv["bf16"] <= fp32 / 2
+                and prec_bpv["int8"] <= fp32 / 4):
+            raise ValueError(
+                f"fig11/{ds} bytes/vector reduction violated: {prec_bpv}")
+
+
+def smoke() -> None:
+    """Tiny interpret-mode sweep + in-process schema/ratio validation."""
+    from benchmarks.run import parse_row
+    rows = run(n=SMOKE_N, backend="interpret")
+    for r in rows:
+        print(r, flush=True)
+    validate_precision_rows([parse_row(r) for r in rows])
+    print("# fig11 smoke: schema + bytes/vector reductions OK",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for build + search "
+                         "(default: current REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--n", type=int, default=3000,
+                    help="vectors per dataset (interpret runs are capped "
+                         f"at {C.INTERPRET_MAX_N})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode sweep, self-validating "
+                         "(non-zero exit on schema/ratio violations)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(n=args.n, backend=args.backend):
+            print(row, flush=True)

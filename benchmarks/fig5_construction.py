@@ -54,7 +54,8 @@ def run(n_seq: int = 2500, backend: str | None = None) -> list[str]:
         ids_seq = jnp.asarray(rnnd_ref.adjacency_to_pool_arrays(adj, 24))
         r_seq = C.eval_recall(x, ids_seq, q, gt)
         rows.append(C.row(f"fig5/{name}/rnnd-cpu", t_seq,
-                          f"recall={r_seq:.3f} speedup=1.0x"))
+                          f"recall={r_seq:.3f} speedup=1.0x",
+                          bytes_per_vector=C.fp32_bpv(x)))
 
         # --- GRNND (parallel, disordered; fused round per backend) ---
         # NOTE on this CPU-only container: wall-clock measures TOTAL work
@@ -74,13 +75,15 @@ def run(n_seq: int = 2500, backend: str | None = None) -> list[str]:
             f"recall={r_g:.3f} cpu1core_speedup={t_seq / t_g:.2f}x "
             f"backend={eff} "
             f"critical_path={path_g} vs_seq={path_seq} "
-            f"parallel_depth_ratio={path_seq / path_g:.0f}x"))
+            f"parallel_depth_ratio={path_seq / path_g:.0f}x",
+            bytes_per_vector=C.fp32_bpv(x)))
 
         # --- random S-NN init (quality floor) ---
         p0 = pools.init_random(jax.random.PRNGKey(2), x, 12, 24)
         r_0 = C.eval_recall(x, p0.ids, q, gt)
         rows.append(C.row(f"fig5/{name}/random-init", 0.0,
-                          f"recall={r_0:.3f} speedup=inf"))
+                          f"recall={r_0:.3f} speedup=inf",
+                          bytes_per_vector=C.fp32_bpv(x)))
     return rows
 
 

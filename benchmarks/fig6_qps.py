@@ -67,7 +67,8 @@ def run(n: int = 4000, backend: str | None = None, visited: str = "dense",
                                       visited_cap=visited_cap)
             rec = recall_at_k(res.ids, gt)
             rows.append(C.row(f"fig6/{name}/grnnd{tag}{vtag}/ef{ef}",
-                              1.0 / qps, f"recall={rec:.3f} qps={qps:.0f}"))
+                              1.0 / qps, f"recall={rec:.3f} qps={qps:.0f}",
+                              bytes_per_vector=C.fp32_bpv(x)))
             if ids_seq is not None:
                 res2, qps2 = C.timed_search(x, ids_seq, q, ef=ef,
                                             repeats=repeats, backend=backend,
@@ -76,7 +77,8 @@ def run(n: int = 4000, backend: str | None = None, visited: str = "dense",
                 rec2 = recall_at_k(res2.ids, gt)
                 rows.append(C.row(f"fig6/{name}/rnnd-cpu{tag}{vtag}/ef{ef}",
                                   1.0 / qps2,
-                                  f"recall={rec2:.3f} qps={qps2:.0f}"))
+                                  f"recall={rec2:.3f} qps={qps2:.0f}",
+                                  bytes_per_vector=C.fp32_bpv(x)))
     return rows
 
 

@@ -108,7 +108,7 @@ def analyze(results_dir: str = "results/dryrun_final", mesh: str = "single"):
 
 
 def grnnd_round_model(d: int, n: int = 1_000_000, r: int = 32,
-                      p: int = 32) -> dict:
+                      p: int = 32, bytes_per_dim: float = 4.0) -> dict:
     """Analytic roofline terms for ONE propagation round, fused vs unfused.
 
     Unfused (the pre-fusion XLA pipeline, EXPERIMENTS.md §Perf cell C):
@@ -123,10 +123,15 @@ def grnnd_round_model(d: int, n: int = 1_000_000, r: int = 32,
 
     FLOPs term: the diff-square-reduce pair math (3·N·P·D) plus the two
     one-hot selection matmuls the fused kernel feeds the MXU (4·N·P·R·D).
+
+    `bytes_per_dim` is the precision ladder's storage width (DESIGN.md §8:
+    4.0 fp32, 2.0 bf16, 1.0 int8): it scales exactly the x-row traffic —
+    the dominant term of the fused round — while pools/samples/outputs
+    stay fp32/int32.
     """
     small_io = n * (2 * r + 2 * p + 3 * p + r) * 4     # pools, samples, outs
-    fused_bytes = n * r * d * 4 + small_io
-    unfused_bytes = 6 * n * p * d * 4 + small_io
+    fused_bytes = int(n * r * d * bytes_per_dim) + small_io
+    unfused_bytes = int(6 * n * p * d * bytes_per_dim) + small_io
     flops = 3.0 * n * p * d + 4.0 * n * p * r * d
     t_mem_fused = fused_bytes / HBM_BW
     t_mem_unfused = unfused_bytes / HBM_BW
@@ -143,19 +148,32 @@ def grnnd_round_model(d: int, n: int = 1_000_000, r: int = 32,
 
 
 def grnnd_round_rows() -> list[str]:
-    """Fused-round speedup rows (recorded alongside the dry-run cells)."""
+    """Fused-round speedup rows (recorded alongside the dry-run cells).
+
+    One row per precision rung (DESIGN.md §8): the fused round is memory-
+    bound at every realistic D, so bf16/int8 storage converts its
+    bytes/vector cut almost 1:1 into round-time cut — the analytic
+    counterpart of benchmarks/fig11_precision.py.
+    """
     out = []
     for shape, d in (("build_1m_d128", 128), ("build_1m_d960", 960)):
-        m = grnnd_round_model(d)
-        derived = (f"dom={m['dominant']}"
-                   f" comp={m['t_compute_s']*1e3:.2f}ms"
-                   f" mem={m['t_mem_fused_s']*1e3:.2f}ms"
-                   f" mem_unfused={m['t_mem_unfused_s']*1e3:.2f}ms"
-                   f" traffic_cut={m['traffic_cut']:.1f}x"
-                   f" round_speedup={m['bound_unfused_s']/m['bound_fused_s']:.1f}x")
-        out.append(
-            f"roofline/grnnd-round-fused/{shape},"
-            f"{m['bound_fused_s']*1e6:.1f},{derived}")
+        base = grnnd_round_model(d)
+        for prec, bpd in (("fp32", 4.0), ("bf16", 2.0), ("int8", 1.0)):
+            m = grnnd_round_model(d, bytes_per_dim=bpd)
+            derived = (f"dom={m['dominant']}"
+                       f" comp={m['t_compute_s']*1e3:.2f}ms"
+                       f" mem={m['t_mem_fused_s']*1e3:.2f}ms"
+                       f" mem_unfused={m['t_mem_unfused_s']*1e3:.2f}ms"
+                       f" traffic_cut={m['traffic_cut']:.1f}x"
+                       f" round_speedup="
+                       f"{m['bound_unfused_s']/m['bound_fused_s']:.1f}x"
+                       f" vs_fp32="
+                       f"{base['bound_fused_s']/m['bound_fused_s']:.2f}x")
+            suffix = "" if prec == "fp32" else f"-{prec}"
+            out.append(
+                f"roofline/grnnd-round-fused{suffix}/{shape},"
+                f"{m['bound_fused_s']*1e6:.1f},{derived}"
+                f" precision={prec} bpv={bpd * d:.1f}")
     return out
 
 
@@ -163,8 +181,12 @@ def run() -> list[str]:
     out = grnnd_round_rows()
     for r in analyze():
         name = f"roofline/{r['arch']}/{r['shape']}"
+        # LLM dry-run cells have no ANN vector storage: precision/bpv are
+        # the schema-mandated placeholders (fp32 compute, no per-vector
+        # bytes), kept so every smoke row validates uniformly
         if r["status"] != "ok":
-            out.append(f"{name},0.0,{r['status']}:{r.get('reason','')[:40]}")
+            out.append(f"{name},0.0,{r['status']}:{r.get('reason','')[:40]}"
+                       f" precision=fp32 bpv=0.0")
             continue
         derived = (f"dom={r['dominant']}"
                    f" comp={r['t_compute_s']*1e3:.2f}ms"
@@ -172,7 +194,8 @@ def run() -> list[str]:
                    f" coll={r['t_collective_s']*1e3:.2f}ms"
                    f" useful={r['useful_ratio']:.2f}"
                    f" frac={r['roofline_frac']:.3f}")
-        out.append(f"{name},{r['bound_s']*1e6:.1f},{derived}")
+        out.append(f"{name},{r['bound_s']*1e6:.1f},{derived}"
+                   f" precision=fp32 bpv=0.0")
     return out
 
 

@@ -23,15 +23,21 @@ import re
 import sys
 import time
 
-ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "roofline")
+ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "roofline")
 
 # the artifact contract: bump ONLY with a matching update to every consumer
 # of the perf trajectory (EXPERIMENTS.md §Tables tooling)
-SMOKE_SCHEMA = 1
+# schema 2: rows carry `precision=` and `bpv=` (bytes/vector of the
+# traversal tier) so the trajectory can distinguish dtype regressions from
+# algorithmic ones (ISSUE 4)
+SMOKE_SCHEMA = 2
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
+_PRECISIONS = ("fp32", "bf16", "int8")
+_PREC_RE = re.compile(r"(?:^|\s)precision=(\S+)")
+_BPV_RE = re.compile(r"(?:^|\s)bpv=(\S+)")
 # families the smoke artifact must always cover (one per serving surface)
-SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "roofline")
+SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "roofline")
 
 
 def _module(name: str):
@@ -47,6 +53,8 @@ def _module(name: str):
         from benchmarks import fig9_iters as m
     elif name == "fig10":
         from benchmarks import fig10_churn as m
+    elif name == "fig11":
+        from benchmarks import fig11_precision as m
     elif name == "roofline":
         from benchmarks import roofline as m
     else:
@@ -55,7 +63,13 @@ def _module(name: str):
 
 
 def parse_row(row: str) -> dict:
-    """Split one CSV row into the artifact dict; raises ValueError on drift."""
+    """Split one CSV row into the artifact dict; raises ValueError on drift.
+
+    Schema 2: the derived column must carry `precision=<rung>` and
+    `bpv=<float>` (traversal-tier bytes/vector; 0.0 for cells with no
+    vector storage, e.g. analytic roofline LLM cells) — both are lifted
+    into top-level artifact fields.
+    """
     parts = row.split(",", 2)
     if len(parts) != 3:
         raise ValueError(f"row is not name,us_per_call,derived: {row!r}")
@@ -63,18 +77,32 @@ def parse_row(row: str) -> dict:
     if not _ROW_RE.match(name):
         raise ValueError(f"row name outside the fig*/roofline namespace: "
                          f"{name!r}")
-    return {"name": name, "us_per_call": float(us), "derived": derived}
+    prec = _PREC_RE.search(derived)
+    bpv = _BPV_RE.search(derived)
+    if not prec or prec.group(1) not in _PRECISIONS:
+        raise ValueError(f"row lacks a valid precision= field: {row!r}")
+    if not bpv:
+        raise ValueError(f"row lacks a bpv= field: {row!r}")
+    bpv_val = float(bpv.group(1))
+    if bpv_val < 0:
+        raise ValueError(f"negative bytes/vector: {row!r}")
+    return {"name": name, "us_per_call": float(us), "derived": derived,
+            "precision": prec.group(1), "bytes_per_vector": bpv_val}
 
 
 def validate_rows(parsed: list[dict]) -> None:
     """Schema gate for the smoke artifact: every family present, no ERROR
-    rows (a crashed benchmark must fail CI, not upload a hole)."""
+    rows (a crashed benchmark must fail CI, not upload a hole), and the
+    fig11 precision ladder covering all rungs at the mandated bytes/vector
+    reductions."""
     for fam in SMOKE_FAMILIES:
         if not any(p["name"].startswith(fam + "/") for p in parsed):
             raise ValueError(f"smoke artifact is missing family {fam!r}")
     errors = [p["name"] for p in parsed if "/ERROR" in p["name"]]
     if errors:
         raise ValueError(f"benchmark families crashed: {errors}")
+    from benchmarks.fig11_precision import validate_precision_rows
+    validate_precision_rows(parsed)
 
 
 def run_smoke(out_path: str) -> None:
@@ -84,6 +112,7 @@ def run_smoke(out_path: str) -> None:
         ("fig5", lambda m: m.run(n_seq=SMOKE_N, backend="interpret")),
         ("fig6", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig10", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig11", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("roofline", lambda m: m.run()),
     )
     for name, call in calls:
@@ -91,7 +120,10 @@ def run_smoke(out_path: str) -> None:
         try:
             rows.extend(call(_module(name)))
         except Exception as e:
-            rows.append(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+            # placeholder precision/bpv keep the row parseable so the
+            # failure surfaces as "families crashed", not schema noise
+            rows.append(f"{name}/ERROR,0.0,{type(e).__name__}:{e}"
+                        f" precision=fp32 bpv=0.0")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
     parsed = [parse_row(r) for r in rows]

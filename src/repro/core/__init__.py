@@ -10,6 +10,8 @@ from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.distributed import (
     sharded_build_graph, make_sharded_builder, distributed_search,
     sharded_apply_requests)
+from repro.core.vecstore import (
+    PRECISIONS, VectorStore, encode, quantize_int8)
 
 __all__ = [
     "GRNNDConfig", "build_graph", "build_graph_with_stats", "update_round",
@@ -19,4 +21,5 @@ __all__ = [
     "DynamicConfig", "DynamicIndex",
     "sharded_build_graph", "make_sharded_builder", "distributed_search",
     "sharded_apply_requests",
+    "PRECISIONS", "VectorStore", "encode", "quantize_int8",
 ]

@@ -38,6 +38,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
 from repro.compat import shard_map
 
 from repro.core import pools as P
+from repro.core import vecstore as VS
 from repro.core.grnnd import (
     GRNNDConfig, _pair_requests_chunk, _sorted_requests_chunk)
 from repro.core.search import SearchResult, medoid, search
@@ -205,24 +206,35 @@ def sharded_build_graph(
 @functools.lru_cache(maxsize=32)
 def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                        max_steps: int, visited: str, visited_cap: int | None,
-                       has_valid: bool, backend: str):
+                       has_valid: bool, quantized: bool, has_rescore: bool,
+                       backend: str):
     """One jitted shard_map per (mesh, axes, search-config) — cached so
     repeated serving batches reuse the compiled executable instead of
     re-tracing per call.  `has_valid` selects the tombstone-masked variant
     (an extra replicated operand); the static path keeps the original
-    maskless trace.  `backend` is unused in the body but part of the cache
-    key: the inner search dispatches kernels at trace time (same contract
-    as search._search_impl)."""
+    maskless trace.  `quantized`/`has_rescore` (the precision ladder,
+    DESIGN.md §8) likewise select variants with the store's scale/offset
+    and the fp32 rescore tier as extra replicated operands — the store is
+    passed FLATTENED (data, scale, offset) so every shard_map operand is a
+    plain array and the in_specs stay structural.  `backend` is unused in
+    the body but part of the cache key: the inner search dispatches
+    kernels at trace time (same contract as search._search_impl)."""
     del backend
     qspec = PSpec(axes)
     rspec = PSpec()
 
-    def body(x_r, graph_r, q_loc, entry_r, *valid_r):
-        return search(x_r, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
+    def body(x_r, graph_r, q_loc, entry_r, *extras):
+        it = iter(extras)
+        x_in = (VS.VectorStore(x_r, next(it), next(it)) if quantized
+                else x_r)
+        rescore = next(it) if has_rescore else None
+        valid = next(it) if has_valid else None
+        return search(x_in, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
                       entry=entry_r, visited=visited, visited_cap=visited_cap,
-                      valid=valid_r[0] if has_valid else None)
+                      valid=valid, rescore=rescore)
 
-    in_specs = (rspec, rspec, qspec, rspec) + ((rspec,) if has_valid else ())
+    n_extra = 2 * quantized + has_rescore + has_valid
+    in_specs = (rspec, rspec, qspec, rspec) + (rspec,) * n_extra
     return jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=in_specs,
@@ -234,7 +246,7 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
 def distributed_search(
     mesh: Mesh,
     axes: Sequence[str],
-    x: jnp.ndarray,
+    x,
     graph_ids: jnp.ndarray,
     queries: jnp.ndarray,
     *,
@@ -245,6 +257,7 @@ def distributed_search(
     visited: str = "dense",
     visited_cap: int | None = None,
     valid: jnp.ndarray | None = None,
+    rescore=None,
 ) -> SearchResult:
     """Query-sharded beam search over the mesh.
 
@@ -253,6 +266,13 @@ def distributed_search(
     on its query slice, so results are bitwise-identical to the single-device
     search for any shard count (no cross-shard state exists).  Queries are
     padded to a multiple of the shard count and the pad rows sliced off.
+
+    `x` may be a VectorStore (the precision ladder): the traversal tier
+    replicates at its compact storage width — bf16 halves and int8 quarters
+    the per-device footprint of the replicated corpus, which is exactly
+    what bounds the serving mesh's maximum N.  `rescore` is the optional
+    fp32 exact tier for the post-beam re-rank (core/search.py), also
+    replicated.
 
     `valid` is the dynamic index's tombstone mask (core/dynamic.py).  It is
     replicated here like x and the graph (query sharding); under VERTEX
@@ -275,16 +295,24 @@ def distributed_search(
         queries = jnp.concatenate(
             [queries, jnp.broadcast_to(queries[:1], (pad, queries.shape[1]))])
 
+    xd, xs, xo = VS.parts(x)
+    quantized = xs is not None
     sharded = _sharded_search_fn(mesh, axes, k, ef, max_steps, visited,
                                  visited_cap, valid is not None,
+                                 quantized, rescore is not None,
                                  ops.effective_backend())
-    x = jax.device_put(x, NamedSharding(mesh, PSpec()))
-    graph_ids = jax.device_put(graph_ids, NamedSharding(mesh, PSpec()))
+    rep = NamedSharding(mesh, PSpec())
+    xd = jax.device_put(xd, rep)
+    graph_ids = jax.device_put(graph_ids, rep)
     queries = jax.device_put(queries, NamedSharding(mesh, PSpec(axes)))
     extra = ()
+    if quantized:
+        extra += (jax.device_put(xs, rep), jax.device_put(xo, rep))
+    if rescore is not None:
+        extra += (jax.device_put(rescore, rep),)
     if valid is not None:
-        extra = (jax.device_put(valid, NamedSharding(mesh, PSpec())),)
-    res = sharded(x, graph_ids, queries, entry, *extra)
+        extra += (jax.device_put(valid, rep),)
+    res = sharded(xd, graph_ids, queries, entry, *extra)
     if pad:
         res = SearchResult(res.ids[:qn], res.dists[:qn], res.n_expanded[:qn])
     return res

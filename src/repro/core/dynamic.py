@@ -35,6 +35,11 @@ The vertex-sharded distributed variant routes insertion requests to the
 owning shard with the same all-gather + local-filter exchange as the build
 (`core.distributed.sharded_apply_requests`); the tombstone mask shards
 with the pools.
+
+With `DynamicConfig(precision=...)` the index keeps a quantized traversal
+tier next to the fp32 buffer (DESIGN.md §8): mutation-path distances stay
+in the traversal space (frozen quantizer params, round-tripped inserts),
+and user-facing searches rescore against the fp32 tier.
 """
 from __future__ import annotations
 
@@ -46,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pools as P
+from repro.core import vecstore as VS
 from repro.core.grnnd import GRNNDConfig, _pair_requests_chunk
 from repro.core.search import SearchResult, medoid, search
 from repro.kernels import ops
@@ -60,6 +66,7 @@ class DynamicConfig(NamedTuple):
     incoming_cap: int | None = None   # staged insertions per vertex per round
     compact_threshold: float = 0.25   # tombstone fraction that triggers compact()
     min_capacity: int = 64            # smallest padded buffer
+    precision: str = "fp32"           # traversal-tier storage (DESIGN.md §8)
 
 
 def _pow2_capacity(need: int, floor: int) -> int:
@@ -132,7 +139,12 @@ class DynamicIndex:
     """A mutable ANN index over padded device buffers.
 
     State (capacity C, pool width R):
-      x      (C, D) f32   — vectors; rows >= size are zero pads
+      x      (C, D) f32   — EXACT-tier vectors; rows >= size are zero pads
+      store              — traversal-tier VectorStore over a (C, D) buffer
+                           (only when cfg.precision != "fp32"; the CAGRA-
+                           style two-tier layout: the compact tier feeds
+                           the bandwidth-bound kernels, the fp32 tier
+                           feeds rescoring and exact ground truth)
       pool   (C, R)       — neighbor ids/dists (ids are internal slots)
       valid  (C,)   bool  — False for tombstones AND unallocated pads
       labels (C,)   i64   — external label per slot (host array, -1 = pad)
@@ -140,6 +152,13 @@ class DynamicIndex:
     `size` is the allocated prefix (live + tombstoned), `n_live` the live
     count.  `rounds_run` counts localized propagation rounds — the unit the
     <25%-of-rebuild acceptance bound is stated in (ISSUE 3 / fig10).
+
+    Precision notes (DESIGN.md §8): the int8 scale/offset are FROZEN at
+    construction (from the initial corpus); inserted vectors quantize with
+    the frozen parameters and clip at the build-time range.  Graph edits
+    (seed search, staging, localized rounds) run entirely in the
+    traversal-tier distance space so pool distances stay consistent;
+    user-facing `search()` rescoring happens against the fp32 tier.
     """
 
     def __init__(self, x: jnp.ndarray, pool: P.Pool,
@@ -147,6 +166,7 @@ class DynamicIndex:
                  key: jax.Array | None = None):
         n, d = x.shape
         assert pool.ids.shape[0] == n
+        assert cfg.precision in VS.PRECISIONS, cfg.precision
         self.cfg = cfg
         self.r = pool.r
         self.size = n
@@ -158,6 +178,24 @@ class DynamicIndex:
         cap = _pow2_capacity(n, cfg.min_capacity)
         self.x = jnp.zeros((cap, d), jnp.float32).at[:n].set(
             x.astype(jnp.float32))
+        if cfg.precision == "fp32":
+            self.store = None
+        else:
+            enc = VS.encode(self.x[:n], cfg.precision)
+            self.store = enc._replace(
+                data=jnp.zeros((cap, d), enc.data.dtype).at[:n].set(enc.data))
+            # re-base the wrapped pool's distances into the traversal
+            # space (§8.3 single-distance-space invariant): the caller's
+            # graph may have been built at fp32, and every later mutation
+            # — RNG kills, topr_merge ranks — compares against THESE
+            # values, so they must be d(x̂_i, x̂_j), not d(x_i, x_j).
+            # Recompute per edge (one-time O(N·R·D)) and re-sort.
+            owners = jnp.repeat(jnp.arange(n, dtype=jnp.int32), pool.r)
+            d_t = ops.gather_sqdist(
+                enc, owners, jnp.clip(pool.ids.reshape(-1), 0)
+            ).reshape(n, pool.r)
+            d_t = jnp.where(pool.ids >= 0, d_t, jnp.inf)
+            pool = P.Pool(*ops.topr_merge(pool.ids, d_t, pool.r))
         self.pool = P.Pool(
             ids=jnp.full((cap, self.r), -1, jnp.int32).at[:n].set(pool.ids),
             dists=jnp.full((cap, self.r), jnp.inf, jnp.float32).at[:n].set(
@@ -185,9 +223,14 @@ class DynamicIndex:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _tier(self):
+        """The traversal-tier dataset the kernels read: the quantized
+        store when one exists, the fp32 buffer otherwise."""
+        return self.store if self.store is not None else self.x
+
     def entry(self) -> jnp.ndarray:
         if self._entry is None:
-            self._entry = medoid(self.x, self.valid)
+            self._entry = medoid(self._tier(), self.valid)
         return self._entry
 
     def _ensure_capacity(self, need: int) -> None:
@@ -197,6 +240,9 @@ class DynamicIndex:
         new_cap = _pow2_capacity(need, cap)
         grow = new_cap - cap
         self.x = jnp.pad(self.x, ((0, grow), (0, 0)))
+        if self.store is not None:
+            self.store = self.store._replace(
+                data=jnp.pad(self.store.data, ((0, grow), (0, 0))))
         self.pool = P.Pool(
             ids=jnp.pad(self.pool.ids, ((0, grow), (0, 0)),
                         constant_values=-1),
@@ -223,11 +269,18 @@ class DynamicIndex:
         cfg = self.cfg
         cap = cfg.incoming_cap if cfg.incoming_cap is not None else self.r
         seed_k = min(cfg.seed_k, self.r)
+        # the batch AS STORED (round-tripped through the frozen quantizer):
+        # both seed paths below must produce traversal-space distances
+        # (§8.3) — d(x̂_new, x̂_other), never d(x_new, ·)
+        xs_t = xs if self.store is None else self.store.requant(xs)
 
         if self.n_live > 0:
             # seed search runs against the pre-insert graph (tombstones and
-            # pad rows are excluded by the validity mask)
-            res = search(self.x, self.pool.ids, xs,
+            # pad rows are excluded by the validity mask).  NO rescoring:
+            # the seed distances become pool entries, so d(x̂_new, x̂_nbr)
+            # here equals what a later propagation round would recompute
+            # for the same edge.
+            res = search(self._tier(), self.pool.ids, xs_t,
                          k=seed_k, ef=max(cfg.seed_ef, seed_k),
                          entry=self.entry(), valid=self.valid)
             seed_ids, seed_d = res.ids, res.dists
@@ -242,12 +295,14 @@ class DynamicIndex:
             # rounds start from a connected neighborhood instead of leaving
             # the corpus permanently unreachable
             k_boot = min(seed_k, max(b - 1, 1))
-            d = ops.pairwise_sqdist(xs, xs)
+            d = ops.pairwise_sqdist(xs_t, xs_t)
             d = d.at[jnp.arange(b), jnp.arange(b)].set(jnp.inf)
             vals, nidx = jax.lax.top_k(-d, k_boot)
             seed_d = -vals
             seed_ids = jnp.where(jnp.isfinite(seed_d), new_slots[nidx], -1)
         self.x = self.x.at[new_slots].set(xs)
+        if self.store is not None:
+            self.store = self.store.with_rows(new_slots, xs)
         self.valid = self.valid.at[new_slots].set(True)
         self.labels[self.size:self.size + b] = np.arange(
             self._next_label, self._next_label + b, dtype=np.int64)
@@ -265,7 +320,7 @@ class DynamicIndex:
         backend = ops.effective_backend()
         for _ in range(cfg.refine_rounds):
             self.pool = _localized_round(
-                self.x, self.pool.ids, self.pool.dists, frontier,
+                self._tier(), self.pool.ids, self.pool.dists, frontier,
                 self._fold_key(), pairs=cfg.pairs_per_vertex, cap=cap,
                 backend=backend)
             self.rounds_run += 1
@@ -335,6 +390,13 @@ class DynamicIndex:
         d = self.x.shape[1]
         x_new = jnp.zeros((cap, d), jnp.float32).at[:n_new].set(
             self.x[jnp.asarray(kept)])
+        if self.store is not None:
+            # scale/offset are frozen, so compaction of the traversal tier
+            # is a pure row gather — no re-quantization, stored bytes (and
+            # therefore every surviving distance) are preserved exactly
+            self.store = self.store._replace(
+                data=jnp.zeros((cap, d), self.store.data.dtype).at[:n_new]
+                .set(self.store.data[jnp.asarray(kept)]))
         # dead neighbors leave holes mid-row: re-establish the sorted,
         # empties-at-end pool invariant with the same merge primitive
         row_i, row_d = ops.topr_merge(jnp.asarray(mapped), jnp.asarray(d_new),
@@ -360,12 +422,21 @@ class DynamicIndex:
 
     def search(self, queries: jnp.ndarray, *, k: int = 10, ef: int = 64,
                max_steps: int = 512, visited: str = "dense",
-               visited_cap: int | None = None) -> SearchResult:
-        """Beam search over the live graph; result ids are external labels."""
-        res = search(self.x, self.pool.ids, queries, k=k, ef=ef,
+               visited_cap: int | None = None,
+               rescore: bool | None = None) -> SearchResult:
+        """Beam search over the live graph; result ids are external labels.
+
+        Traversal reads the compact tier; at quantized precision the final
+        ef candidates are re-ranked against the fp32 tier (`rescore=None`
+        = auto: on iff the traversal tier is quantized).
+        """
+        if rescore is None:
+            rescore = self.store is not None
+        res = search(self._tier(), self.pool.ids, queries, k=k, ef=ef,
                      max_steps=max_steps, entry=self.entry(),
                      visited=visited, visited_cap=visited_cap,
-                     valid=self.valid)
+                     valid=self.valid,
+                     rescore=self.x if rescore else None)
         ids = np.asarray(res.ids)
         lab = np.where(ids >= 0, self.labels[np.clip(ids, 0, None)],
                        np.int64(-1))

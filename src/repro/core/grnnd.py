@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pools as P
+from repro.core import vecstore as VS
 from repro.kernels import ops
 
 
@@ -110,7 +111,9 @@ def _sorted_requests_chunk(x, ids_c, dists_c, rows_c, key, cfg: GRNNDConfig):
     valid_o = ids_o >= 0
 
     # pairwise distances among pool members, in sorted-slot space
-    vecs = x[jnp.clip(ids_o, 0).reshape(-1)].reshape(c, r, -1)
+    # (store-aware gather: rows land dequantized fp32, the same values the
+    # fused disordered-round kernel dequantizes in VMEM)
+    vecs = VS.take(x, jnp.clip(ids_o, 0).reshape(-1)).reshape(c, r, -1)
     xx = jnp.sum(vecs * vecs, axis=-1)
     g = xx[:, :, None] + xx[:, None, :] - 2.0 * jnp.einsum(
         "crd,csd->crs", vecs, vecs, preferred_element_type=jnp.float32)
@@ -292,8 +295,15 @@ def _build_graph_impl(key: jax.Array, x: jnp.ndarray, cfg: GRNNDConfig,
     return jax.lax.fori_loop(0, t1, outer, pool)
 
 
-def build_graph(key: jax.Array, x: jnp.ndarray, cfg: GRNNDConfig) -> P.Pool:
-    """Construct the ANN graph: init -> T1 x (T2 rounds + reverse sampling)."""
+def build_graph(key: jax.Array, x, cfg: GRNNDConfig) -> P.Pool:
+    """Construct the ANN graph: init -> T1 x (T2 rounds + reverse sampling).
+
+    `x` is a plain fp32 array or a `core.vecstore.VectorStore` (bf16/int8
+    per the precision ladder, DESIGN.md §8): every distance of the build —
+    init, fused propagation rounds, sorted ablations — is then computed on
+    storage-precision rows (dequantized in-kernel), with fp32 accumulation
+    as always.
+    """
     static_cfg = cfg._replace(t1=-1, t2=-1, rho=-1.0)  # normalize jit key
     return _build_graph_impl(key, x, static_cfg,
                              jnp.int32(cfg.t1), jnp.int32(cfg.t2),

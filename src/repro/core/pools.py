@@ -25,6 +25,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import vecstore as VS
 from repro.kernels import ops
 
 
@@ -51,11 +52,14 @@ def empty_pool(n: int, r: int) -> Pool:
     )
 
 
-def init_random(key: jax.Array, x: jnp.ndarray, s: int, r: int) -> Pool:
+def init_random(key: jax.Array, x, s: int, r: int) -> Pool:
     """Random S-NN initialization (paper Alg. 3 lines 3-5).
 
     Each vertex receives S distinct-ish random neighbors (self-edges are
     rerolled by offset), with true distances, placed in an R-capacity pool.
+    `x` may be a VectorStore (the precision ladder): init distances are
+    then computed in the same storage-precision distance space as every
+    later round, so the pool's distance invariants stay consistent.
     """
     n, _ = x.shape
     assert s <= r
@@ -70,12 +74,17 @@ def init_random(key: jax.Array, x: jnp.ndarray, s: int, r: int) -> Pool:
     return Pool(*ops.topr_merge(ids, dists, r))
 
 
-def _owner_dists(x: jnp.ndarray, owners: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
-    """d(x[owner], x[id]) for an (B, K) id matrix; invalid ids -> +inf."""
+def _owner_dists(x, owners: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """d(x[owner], x[id]) for an (B, K) id matrix; invalid ids -> +inf.
+
+    Store-aware: rows are gathered dequantized (fp32), so the rowwise
+    kernel below sees the same values the fused build kernels dequantize
+    in VMEM.
+    """
     b, k = ids.shape
     safe = jnp.clip(ids, 0)
-    xv = x[owners]                                  # (B, D)
-    nv = x[safe.reshape(-1)].reshape(b, k, -1)      # (B, K, D)
+    xv = VS.take(x, owners)                                  # (B, D)
+    nv = VS.take(x, safe.reshape(-1)).reshape(b, k, -1)      # (B, K, D)
     d = ops.rowwise_sqdist(
         jnp.repeat(xv, k, axis=0).reshape(b * k, -1),
         nv.reshape(b * k, -1),

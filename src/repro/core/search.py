@@ -34,6 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import vecstore as VS
 from repro.kernels import ops
 from repro.kernels.ref import visited_probe_positions
 
@@ -44,18 +45,21 @@ class SearchResult(NamedTuple):
     n_expanded: jnp.ndarray  # (Q,) int32 — distance computations proxy
 
 
-def medoid(x: jnp.ndarray, valid: jnp.ndarray | None = None) -> jnp.ndarray:
+def medoid(x, valid: jnp.ndarray | None = None) -> jnp.ndarray:
     """Entry point: vertex nearest to the dataset centroid.
 
     With a `valid` mask (dynamic index: tombstones + unallocated padded
     rows, core/dynamic.py), both the centroid and the argmin are restricted
-    to live rows, so the entry is always a live vertex.
+    to live rows, so the entry is always a live vertex.  `x` may be a
+    VectorStore: the centroid is taken over the dequantized corpus (a
+    one-shot startup computation, not a hot path) so the entry choice
+    matches what the traversal distances will see.
     """
     if valid is None:
-        c = jnp.mean(x, axis=0, keepdims=True)
+        c = jnp.mean(VS.dequant(x), axis=0, keepdims=True)
         return jnp.argmin(ops.pairwise_sqdist(c, x)[0]).astype(jnp.int32)
     v = valid.astype(jnp.float32)
-    c = (jnp.sum(x * v[:, None], axis=0)
+    c = (jnp.sum(VS.dequant(x) * v[:, None], axis=0)
          / jnp.maximum(jnp.sum(v), 1.0))[None, :]
     d = jnp.where(valid, ops.pairwise_sqdist(c, x)[0], jnp.inf)
     return jnp.argmin(d).astype(jnp.int32)
@@ -102,11 +106,12 @@ def _table_insert(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     static_argnames=("k", "ef", "max_steps", "visited", "visited_cap",
                      "backend"))
 def _search_impl(
-    x: jnp.ndarray,
+    x,
     graph_ids: jnp.ndarray,
     queries: jnp.ndarray,
     entry: jnp.ndarray,
     valid: jnp.ndarray | None,
+    rescore,
     *,
     k: int,
     ef: int,
@@ -123,7 +128,9 @@ def _search_impl(
     q = queries.shape[0]
     qrows = jnp.arange(q, dtype=jnp.int32)
 
-    d_entry = ops.rowwise_sqdist(queries, jnp.broadcast_to(x[entry], queries.shape))
+    queries = queries.astype(jnp.float32)
+    d_entry = ops.rowwise_sqdist(
+        queries, jnp.broadcast_to(VS.take(x, entry), queries.shape))
     if valid is not None:
         # a dead entry contributes nothing; every later insertion into the
         # beam is already validity-filtered inside search_expand, so the
@@ -198,11 +205,25 @@ def _search_impl(
     state = (cand_ids, cand_dists, expanded, vstate, n_exp, jnp.int32(0))
     cand_ids, cand_dists, expanded, vstate, n_exp, _ = jax.lax.while_loop(
         cond, body, state)
+
+    if rescore is not None:
+        # fp32 rescoring pass (DESIGN.md §8.3): traversal ranked the beam
+        # in the storage precision's distance space; re-rank the final ef
+        # candidates with EXACT distances against the rescore tier.  One
+        # (Q, ef, D) gather — ef·D bytes per query, tiny next to the
+        # traversal traffic — then the usual dedup/sort merge primitive
+        # (ids are already unique, so this is a pure re-sort).
+        rv = VS.take(rescore, jnp.clip(cand_ids, 0))           # (Q, ef, D)
+        diff = queries[:, None, :] - rv
+        d_exact = jnp.sum(diff * diff, axis=-1)
+        d_exact = jnp.where(cand_ids >= 0, d_exact, jnp.inf)
+        cand_ids, cand_dists = ops.topr_merge(cand_ids, d_exact, ef)
+
     return SearchResult(cand_ids[:, :k], cand_dists[:, :k], n_exp)
 
 
 def search(
-    x: jnp.ndarray,
+    x,
     graph_ids: jnp.ndarray,
     queries: jnp.ndarray,
     *,
@@ -213,8 +234,13 @@ def search(
     visited: str = "dense",
     visited_cap: int | None = None,
     valid: jnp.ndarray | None = None,
+    rescore=None,
 ) -> SearchResult:
     """Search the graph for the k nearest vertices to each query row.
+
+    `x` is the traversal-tier dataset: a plain fp32 array or a
+    `core.vecstore.VectorStore` (bf16 / int8 per the precision ladder,
+    DESIGN.md §8) — the fused expansion kernel dequantizes rows on the fly.
 
     `visited` selects the visited-set representation: "dense" (exact (Q, N)
     bitmask) or "hashed" (per-query `visited_cap`-slot open-addressed table,
@@ -227,6 +253,12 @@ def search(
     — so the result set is exactly what a search over the physically
     compacted graph would produce.  None (the static-index default) keeps
     the original path bit-for-bit.
+
+    `rescore` is the optional exact tier for quantized traversal (the
+    CAGRA/GGNN two-tier layout): an (N, D) fp32 array (or higher-precision
+    store) from which the final ef candidates are re-ranked with exact
+    distances.  None (the default) returns traversal-space distances
+    unchanged — the fp32 path stays bit-for-bit.
     """
     assert ef >= k
     assert visited in ("dense", "hashed"), visited
@@ -237,7 +269,7 @@ def search(
         cap = 0  # unused; normalized so it never fragments the jit cache
     else:
         cap = visited_cap if visited_cap is not None else default_visited_cap(ef)
-    return _search_impl(x, graph_ids, queries, entry, valid,
+    return _search_impl(x, graph_ids, queries, entry, valid, rescore,
                         k=k, ef=ef, max_steps=max_steps,
                         visited=visited, visited_cap=cap,
                         backend=ops.effective_backend())

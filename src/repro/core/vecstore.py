@@ -1,0 +1,196 @@
+"""VectorStore: the precision ladder for dataset vectors (DESIGN.md §8).
+
+Every distance in the repo — build (`pairwise_l2`, `rng_round`), query
+(`search_expand`, `gather_l2`), and the dynamic path — reads rows of the
+(N, D) dataset.  At fp32 that is 4·D bytes per row of HBM/VMEM traffic on
+paths that are memory-bound (EXPERIMENTS.md §Perf), so storage precision
+directly caps build N and serve QPS.  `VectorStore` holds the vectors at
+one of three rungs:
+
+  * ``fp32`` — the exact baseline (a plain array wrapped unchanged);
+  * ``bf16`` — 2 bytes/dim; kernels widen to fp32 on load, so distances
+    differ from fp32 only by the storage rounding of the inputs;
+  * ``int8`` — 1 byte/dim scalar quantization with per-dimension affine
+    (scale, offset) computed from the corpus at build/encode time:
+
+        q = clip(round((x - offset) / scale), -127, 127)     stored int8
+        x̂ = q · scale + offset                               dequant
+
+    The dequant is FUSED into the kernels (each DMA'd row is widened and
+    affine-corrected in VMEM); the (N, D) fp32 dequantized matrix never
+    exists.  Distances always accumulate in fp32 on the MXU.
+
+The dequant ``x̂ = q·scale + offset`` is elementwise, so computing it
+inside a kernel and inside the ref.py oracle produces bitwise-identical
+fp32 rows — the precision ladder preserves the kernel/oracle bitwise
+parity contract (tests/test_precision.py).
+
+The int8 rung is approximate; exact results come back via the fp32
+RESCORING pass after beam search (core/search.py `rescore=`): the top-ef
+candidate ids gather their fp32 rows (ef·D bytes per query — tiny next to
+traversal traffic) and are re-ranked with exact distances, the
+CAGRA/GGNN two-tier layout.
+
+This module depends only on jax and `kernels/ref.py` (the shared dequant
+formula); kernels/ops.py duck-types on the (data, scale, offset) triple,
+so no import cycle with the core package exists.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# the single dequant formula, shared with the kernel oracles (and inlined,
+# operation-for-operation, in the Pallas kernel bodies)
+from repro.kernels.ref import dequant_rows
+
+PRECISIONS = ("fp32", "bf16", "int8")
+
+# int8 quantization range: symmetric ±127 around the per-dim midpoint
+# (255 levels would make round-trip error asymmetric at the range edges)
+_QLEVELS = 254.0
+
+
+class VectorStore(NamedTuple):
+    """Dataset vectors at one rung of the precision ladder.
+
+    data   (N, D) float32 | bfloat16 | int8
+    scale  (D,)   float32 — per-dim dequant scale; None for float rungs
+    offset (D,)   float32 — per-dim dequant offset; None for float rungs
+
+    A NamedTuple so it is a jit-able pytree; the None scale/offset of the
+    float rungs are part of the treedef, giving the kernels a trace-time
+    `quantized` flag exactly like the search path's `valid=None` contract.
+    """
+    data: jnp.ndarray
+    scale: jnp.ndarray | None = None
+    offset: jnp.ndarray | None = None
+
+    @property
+    def precision(self) -> str:
+        if self.data.dtype == jnp.int8:
+            return "int8"
+        if self.data.dtype == jnp.bfloat16:
+            return "bf16"
+        return "fp32"
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Logical (N, D) — lets store-aware callers keep array idiom."""
+        return self.data.shape
+
+    def bytes_per_vector(self, include_overhead: bool = False) -> float:
+        """Storage bytes per row; overhead = the shared (D,) scale/offset
+        amortized over N (negligible at any real N — reported separately
+        so the ≥2x/≥4x reduction claims stay clean)."""
+        per_row = self.dim * self.data.dtype.itemsize
+        if include_overhead and self.scale is not None:
+            per_row += 8.0 * self.dim / max(self.n, 1)
+        return float(per_row)
+
+    def dequant(self) -> jnp.ndarray:
+        """Full (N, D) fp32 view (entry-point selection / one-shot uses;
+        hot paths must go through the fused kernel operands instead)."""
+        return dequant_rows(self.data, self.scale, self.offset)
+
+    def take(self, idx: jnp.ndarray) -> jnp.ndarray:
+        """Gather rows by index -> fp32, dequantized (any idx shape)."""
+        return dequant_rows(self.data[idx], self.scale, self.offset)
+
+    def quantize_rows(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Encode new fp32 rows with this store's FROZEN parameters (the
+        dynamic-index insert path).  Values outside the build-time range
+        clip to the range edge."""
+        x = jnp.asarray(x)
+        if self.scale is None:
+            return x.astype(self.data.dtype)
+        q = jnp.round((x.astype(jnp.float32) - self.offset) / self.scale)
+        return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+    def requant(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Round-trip fp32 rows through this store's representation: the
+        value the kernels would see if the rows were stored.  Keeps
+        off-store distance math (e.g. the dynamic bootstrap) in the same
+        distance space as the graph."""
+        return dequant_rows(self.quantize_rows(x), self.scale, self.offset)
+
+    def with_rows(self, idx: jnp.ndarray, x: jnp.ndarray) -> "VectorStore":
+        """Functionally set rows `idx` to (encoded) fp32 rows `x`."""
+        return self._replace(data=self.data.at[idx].set(self.quantize_rows(x)))
+
+
+def quantize_int8(x: jnp.ndarray) -> VectorStore:
+    """Per-dimension affine int8 quantization of an (N, D) fp32 corpus.
+
+    scale/offset are chosen from the per-dim [min, max] so the whole
+    corpus is in-range: round-trip error obeys |x - x̂| <= scale/2
+    elementwise (tests/test_precision.py property tier).  A constant
+    dimension gets scale 1 (q = 0 everywhere, x̂ = offset = the constant,
+    zero error) rather than a 0/0.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    lo = jnp.min(x, axis=0)
+    hi = jnp.max(x, axis=0)
+    offset = lo + (hi - lo) * 0.5
+    scale = jnp.where(hi > lo, (hi - lo) / _QLEVELS, 1.0)
+    q = jnp.clip(jnp.round((x - offset) / scale), -127.0, 127.0)
+    return VectorStore(q.astype(jnp.int8), scale, offset)
+
+
+def encode(x: jnp.ndarray, precision: str) -> VectorStore:
+    """Encode an (N, D) corpus at the given precision rung."""
+    assert precision in PRECISIONS, \
+        f"precision must be one of {PRECISIONS}, got {precision!r}"
+    if precision == "int8":
+        return quantize_int8(x)
+    if precision == "bf16":
+        return VectorStore(jnp.asarray(x).astype(jnp.bfloat16))
+    return VectorStore(jnp.asarray(x, jnp.float32))
+
+
+# -- store-or-array helpers (the build/search layers accept either) --------
+
+def as_store(x) -> VectorStore:
+    return x if isinstance(x, VectorStore) else VectorStore(jnp.asarray(x))
+
+
+def parts(x) -> tuple[jnp.ndarray, jnp.ndarray | None, jnp.ndarray | None]:
+    """(data, scale, offset) of a store, or (x, None, None) for an array."""
+    if isinstance(x, VectorStore):
+        return x.data, x.scale, x.offset
+    return x, None, None
+
+
+def nrows(x) -> int:
+    return x.shape[0]
+
+
+def dim(x) -> int:
+    return x.shape[1]
+
+
+def take(x, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather rows -> fp32 (dequantized for stores, widened for arrays)."""
+    if isinstance(x, VectorStore):
+        return x.take(idx)
+    return x[idx].astype(jnp.float32)
+
+
+def dequant(x) -> jnp.ndarray:
+    """(N, D) fp32 view of a store or array."""
+    if isinstance(x, VectorStore):
+        return x.dequant()
+    return jnp.asarray(x).astype(jnp.float32)
+
+
+def precision_of(x) -> str:
+    return as_store(x).precision

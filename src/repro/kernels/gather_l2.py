@@ -25,10 +25,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_l2_kernel(ni_ref, nj_ref, xi_ref, xj_ref, o_ref):
-    """Grid: (M,). xi/xj blocks are single rows DMA'd per prefetched index."""
-    del ni_ref, nj_ref  # consumed by the index_maps
-    diff = xi_ref[...].astype(jnp.float32) - xj_ref[...].astype(jnp.float32)
+def _gather_l2_kernel(ni_ref, nj_ref, *refs, quantized: bool):
+    """Grid: (M,). xi/xj blocks are single rows DMA'd per prefetched index.
+
+    `quantized` (the precision ladder, DESIGN.md §8) is a trace-time flag:
+    the int8 variant carries (1, D) scale/offset operands, and both DMA'd
+    rows are dequantized with the same elementwise formula as
+    `ref.dequant_rows` before the subtract-square-reduce — bitwise oracle
+    parity preserved.
+    """
+    if quantized:
+        xi_ref, xj_ref, scale_ref, offset_ref, o_ref = refs
+    else:
+        scale_ref = offset_ref = None
+        xi_ref, xj_ref, o_ref = refs
+    xi = xi_ref[...].astype(jnp.float32)
+    xj = xj_ref[...].astype(jnp.float32)
+    if quantized:
+        xi = xi * scale_ref[...] + offset_ref[...]
+        xj = xj * scale_ref[...] + offset_ref[...]
+    diff = xi - xj
     o_ref[...] = jnp.sum(diff * diff, axis=-1)
 
 
@@ -37,6 +53,8 @@ def gather_sqdist_pallas(
     x: jnp.ndarray,
     ni: jnp.ndarray,
     nj: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    offset: jnp.ndarray | None = None,
     *,
     interpret: bool = False,
 ) -> jnp.ndarray:
@@ -45,11 +63,21 @@ def gather_sqdist_pallas(
     x (N, D) stays in HBM (ANY memory space); per grid step the BlockSpec
     index_map selects row ni[m] / nj[m] via the scalar-prefetched index
     arrays.  Invalid indices (< 0) are clamped by the caller's mask.
+    scale/offset are the precision ladder's optional (D,) per-dim dequant
+    of the stored x rows (None = float storage).
     """
     m = ni.shape[0]
     n, d = x.shape
+    quantized = scale is not None
     ni = jnp.clip(ni.astype(jnp.int32), 0, n - 1)
     nj = jnp.clip(nj.astype(jnp.int32), 0, n - 1)
+
+    q_ops, q_specs = (), []
+    if quantized:
+        q_ops = tuple(v.astype(jnp.float32).reshape(1, d)
+                      for v in (scale, offset))
+        q_specs = [pl.BlockSpec((1, d),
+                                lambda i, ni_ref, nj_ref: (0, 0))] * 2
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,           # (ni, nj) land as index operands
@@ -57,13 +85,13 @@ def gather_sqdist_pallas(
         in_specs=[
             pl.BlockSpec((1, d), lambda i, ni_ref, nj_ref: (ni_ref[i], 0)),
             pl.BlockSpec((1, d), lambda i, ni_ref, nj_ref: (nj_ref[i], 0)),
-        ],
+        ] + q_specs,
         out_specs=pl.BlockSpec((1,), lambda i, ni_ref, nj_ref: (i,)),
     )
     out = pl.pallas_call(
-        _gather_l2_kernel,
+        functools.partial(_gather_l2_kernel, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
         interpret=interpret,
-    )(ni, nj, x, x)
+    )(ni, nj, x, x, *q_ops)
     return out

@@ -23,12 +23,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.gather_l2 import gather_sqdist_pallas
 from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas, rowwise_sqdist_pallas
 from repro.kernels.rng_round import rng_round_pallas
 from repro.kernels.search_expand import search_expand_pallas
 from repro.kernels.topr_merge import topr_merge_pallas
 
 _VALID = ("auto", "pallas", "interpret", "ref", "xla")
+
+
+def _parts(x):
+    """(data, scale, offset) of a dataset operand.
+
+    Every distance entry point accepts either a plain (N, D) array or a
+    `core.vecstore.VectorStore` (the precision ladder, DESIGN.md §8).
+    Duck-typed on the store's field names rather than an isinstance so this
+    module needs no import from the core package (kernels sit below core
+    in the layering).
+    """
+    if hasattr(x, "scale") and hasattr(x, "data"):
+        return x.data, x.scale, x.offset
+    return x, None, None
 
 
 def _normalize(backend: str) -> str:
@@ -76,11 +91,17 @@ def _interpret() -> bool:
     return effective_backend() == "interpret"
 
 
-def pairwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    """(M,D) x (N,D) -> (M,N) squared L2, fp32."""
+def pairwise_sqdist(x, y) -> jnp.ndarray:
+    """(M,D) x (N,D) -> (M,N) squared L2, fp32.
+
+    Either side may be a VectorStore (fused dequant in the kernel tiles).
+    """
+    xd, xs, xo = _parts(x)
+    yd, ys, yo = _parts(y)
     if get_backend() == "ref":
-        return _ref.pairwise_sqdist_ref(x, y)
-    return pairwise_sqdist_pallas(x, y, interpret=_interpret())
+        return _ref.pairwise_sqdist_ref(xd, yd, xs, xo, ys, yo)
+    return pairwise_sqdist_pallas(xd, yd, xs, xo, ys, yo,
+                                  interpret=_interpret())
 
 
 def rowwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
@@ -104,11 +125,13 @@ def search_expand(x, queries, nbrs, table, valid=None):
     neighbor-vector gather, query->neighbor distances, the visited-table
     probe, and the optional tombstone-validity probe into one VMEM-resident
     pass (kernels/search_expand.py).  `valid` is the dynamic index's (N,)
-    vertex-validity mask (None = all live, the static-index path).
+    vertex-validity mask (None = all live, the static-index path).  `x`
+    may be a VectorStore (fused dequant on the row DMA).
     """
+    xd, xs, xo = _parts(x)
     if get_backend() == "ref":
-        return _ref.search_expand_ref(x, queries, nbrs, table, valid)
-    return search_expand_pallas(x, queries, nbrs, table, valid,
+        return _ref.search_expand_ref(xd, queries, nbrs, table, valid, xs, xo)
+    return search_expand_pallas(xd, queries, nbrs, table, valid, xs, xo,
                                 interpret=_interpret())
 
 
@@ -117,8 +140,24 @@ def rng_propagation_round(x, ids, dists, si, sj):
 
     See ref.rng_round_ref for semantics; the pallas path fuses the
     neighbor-vector gather, pair distances, RNG criterion, and kill-mask
-    emission into one VMEM-resident pass (kernels/rng_round.py).
+    emission into one VMEM-resident pass (kernels/rng_round.py).  `x` may
+    be a VectorStore (fused dequant on the row DMA).
     """
+    xd, xs, xo = _parts(x)
     if get_backend() == "ref":
-        return _ref.rng_round_ref(x, ids, dists, si, sj)
-    return rng_round_pallas(x, ids, dists, si, sj, interpret=_interpret())
+        return _ref.rng_round_ref(xd, ids, dists, si, sj, xs, xo)
+    return rng_round_pallas(xd, ids, dists, si, sj, xs, xo,
+                            interpret=_interpret())
+
+
+def gather_sqdist(x, ni, nj) -> jnp.ndarray:
+    """d(x[ni[m]], x[nj[m]]) for m in [0, M) -> (M,) fp32.
+
+    See ref.gather_sqdist_ref; the pallas path (kernels/gather_l2.py) DMAs
+    the two rows per step straight into VMEM — no materialized (M, D)
+    gathers.  `x` may be a VectorStore (fused dequant on the row DMA).
+    """
+    xd, xs, xo = _parts(x)
+    if get_backend() == "ref":
+        return _ref.gather_sqdist_ref(xd, ni, nj, xs, xo)
+    return gather_sqdist_pallas(xd, ni, nj, xs, xo, interpret=_interpret())

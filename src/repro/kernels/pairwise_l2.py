@@ -25,11 +25,27 @@ DEFAULT_BN = 128
 DEFAULT_BK = 512
 
 
-def _pairwise_kernel(x_ref, y_ref, o_ref):
-    """Grid: (M/BM, N/BN, D/BK).  Accumulates over the k axis."""
+def _pairwise_kernel(x_ref, y_ref, *refs, xq: bool, yq: bool):
+    """Grid: (M/BM, N/BN, D/BK).  Accumulates over the k axis.
+
+    `xq`/`yq` are trace-time flags for the precision ladder (DESIGN.md §8):
+    a quantized side carries a (1, BK) scale and offset slab, and its rows
+    are dequantized in VMEM right after the fp32 widen — the same
+    elementwise `dequant_rows` formula as the ref.py oracle, so the fused
+    dequant changes nothing about oracle parity.  The fp32/bf16 path
+    compiles without the extra operands.
+    """
+    it = iter(refs)
+    sx_ref, ox_ref = (next(it), next(it)) if xq else (None, None)
+    sy_ref, oy_ref = (next(it), next(it)) if yq else (None, None)
+    o_ref = next(it)
     k = pl.program_id(2)
     x = x_ref[...].astype(jnp.float32)  # (BM, BK)
     y = y_ref[...].astype(jnp.float32)  # (BN, BK)
+    if xq:
+        x = x * sx_ref[...] + ox_ref[...]
+    if yq:
+        y = y * sy_ref[...] + oy_ref[...]
     xx = jnp.sum(x * x, axis=-1, keepdims=True)                    # (BM, 1)
     yy = jnp.sum(y * y, axis=-1)[None, :]                          # (1, BN)
     xy = jax.lax.dot_general(
@@ -64,35 +80,59 @@ def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 def pairwise_sqdist_pallas(
     x: jnp.ndarray,
     y: jnp.ndarray,
+    x_scale: jnp.ndarray | None = None,
+    x_offset: jnp.ndarray | None = None,
+    y_scale: jnp.ndarray | None = None,
+    y_offset: jnp.ndarray | None = None,
     *,
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Squared L2 distances between rows of x (M,D) and y (N,D) -> (M,N) fp32."""
+    """Squared L2 distances between rows of x (M,D) and y (N,D) -> (M,N) fp32.
+
+    Either side may be stored quantized (int8 + per-dim (D,) scale/offset,
+    the precision ladder): the dequant is fused into the tile load.  The
+    scale/offset slabs are ZERO-padded along D, so padded columns dequant
+    to exactly 0 and contribute nothing to any distance.
+    """
     m, d = x.shape
     n, d2 = y.shape
     assert d == d2, f"dim mismatch {d} vs {d2}"
     bk = min(bk, max(128, d))
+    xq = x_scale is not None
+    yq = y_scale is not None
 
     xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
     yp = _pad_to(_pad_to(y, 0, bn), 1, bk)
     mp, dp = xp.shape
     np_, _ = yp.shape
 
+    def _qslab(v):  # (D,) -> (1, dp), zero-padded
+        return _pad_to(v.astype(jnp.float32).reshape(1, d), 1, bk)
+
+    qspec = pl.BlockSpec((1, bk), lambda i, j, k: (0, k))
+    ops_q, specs_q = [], []
+    if xq:
+        ops_q += [_qslab(x_scale), _qslab(x_offset)]
+        specs_q += [qspec, qspec]
+    if yq:
+        ops_q += [_qslab(y_scale), _qslab(y_offset)]
+        specs_q += [qspec, qspec]
+
     grid = (mp // bm, np_ // bn, dp // bk)
     out = pl.pallas_call(
-        _pairwise_kernel,
+        functools.partial(_pairwise_kernel, xq=xq, yq=yq),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
-        ],
+        ] + specs_q,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(xp, yp)
+    )(xp, yp, *ops_q)
     return jnp.maximum(out[:m, :n], 0.0)
 
 

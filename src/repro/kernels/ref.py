@@ -15,6 +15,8 @@ __all__ = [
     "topr_merge_ref",
     "rng_round_ref",
     "search_expand_ref",
+    "gather_sqdist_ref",
+    "dequant_rows",
     "visited_probe_positions",
     "HASH_PROBES",
 ]
@@ -25,15 +27,38 @@ __all__ = [
 HASH_PROBES = 8
 
 
-def pairwise_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+def dequant_rows(data: jnp.ndarray, scale, offset) -> jnp.ndarray:
+    """The precision ladder's dequant (DESIGN.md §8): fp32 widen, then the
+    per-dim affine correction.  scale/offset None = a float rung (fp32 or
+    bf16 storage), where the widen alone is exact.
+
+    This is the single formula shared by `core.vecstore.VectorStore`, every
+    oracle below, and — inlined operation-for-operation — the Pallas kernel
+    bodies: it is elementwise, so oracle and kernel produce bitwise-equal
+    fp32 rows from the same stored bytes (tests/test_precision.py).
+    """
+    x = data.astype(jnp.float32)
+    if scale is not None:
+        x = x * scale + offset
+    return x
+
+
+def pairwise_sqdist_ref(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    x_scale=None, x_offset=None,
+    y_scale=None, y_offset=None,
+) -> jnp.ndarray:
     """Squared L2 distances between all rows of x (M,D) and y (N,D) -> (M,N).
 
     Uses the MXU-friendly decomposition ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y
     with fp32 accumulation, clamped at zero (the decomposition can go slightly
-    negative in floating point).
+    negative in floating point).  The optional per-side (D,) scale/offset are
+    the precision ladder's fused dequant (applied to the stored rows before
+    the distance math — see `dequant_rows`).
     """
-    x = x.astype(jnp.float32)
-    y = y.astype(jnp.float32)
+    x = dequant_rows(x, x_scale, x_offset)
+    y = dequant_rows(y, y_scale, y_offset)
     xx = jnp.sum(x * x, axis=-1, keepdims=True)  # (M, 1)
     yy = jnp.sum(y * y, axis=-1)[None, :]        # (1, N)
     xy = x @ y.T                                  # (M, N)
@@ -46,21 +71,43 @@ def rowwise_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(d * d, axis=-1)
 
 
+def gather_sqdist_ref(
+    x: jnp.ndarray,
+    ni: jnp.ndarray,
+    nj: jnp.ndarray,
+    scale=None, offset=None,
+) -> jnp.ndarray:
+    """d(x[ni[m]], x[nj[m]]) for m in [0, M) — oracle for gather_l2.py.
+
+    Indices < 0 are clamped to row 0 (matching the kernel's clamp; callers
+    mask invalid entries themselves).  scale/offset are the precision
+    ladder's per-dim dequant of the stored x rows.
+    """
+    n = x.shape[0]
+    xi = dequant_rows(x[jnp.clip(ni, 0, n - 1)], scale, offset)
+    xj = dequant_rows(x[jnp.clip(nj, 0, n - 1)], scale, offset)
+    d = xi - xj
+    return jnp.sum(d * d, axis=-1)
+
+
 def rng_round_ref(
     x: jnp.ndarray,
     ids: jnp.ndarray,
     dists: jnp.ndarray,
     si: jnp.ndarray,
     sj: jnp.ndarray,
+    scale=None, offset=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One disordered RNG propagation round (GRNND Alg. 4 lines 4-10).
 
     Args:
-      x:     (N, D) dataset.
+      x:     (N, D) dataset (fp32/bf16/int8 per the precision ladder).
       ids:   (C, R) int32 pool ids; -1 marks an empty slot.
       dists: (C, R) float32 distances to the owning vertex; +inf for empty.
       si/sj: (C, P) int32 sampled slot indices in [0, R) — drawn by the
              caller so every backend evaluates the identical pairs.
+      scale/offset: optional (D,) per-dim dequant of the stored x rows
+             (`dequant_rows`); None = float storage.
 
     Returns (dst (C,P) i32, src (C,P) i32, dij (C,P) f32, kill (C,R) bool).
     For each sampled pair that is valid (both slots occupied, distinct
@@ -77,8 +124,8 @@ def rng_round_ref(
     dvj = jnp.take_along_axis(dists, sj, axis=1)
     valid = (ni >= 0) & (nj >= 0) & (ni != nj)
 
-    xi = x[jnp.clip(ni, 0).reshape(-1)].astype(jnp.float32)
-    xj = x[jnp.clip(nj, 0).reshape(-1)].astype(jnp.float32)
+    xi = dequant_rows(x[jnp.clip(ni, 0).reshape(-1)], scale, offset)
+    xj = dequant_rows(x[jnp.clip(nj, 0).reshape(-1)], scale, offset)
     diff = xi - xj
     dij = jnp.sum(diff * diff, axis=-1).reshape(c, p)
 
@@ -115,11 +162,14 @@ def search_expand_ref(
     nbrs: jnp.ndarray,
     table: jnp.ndarray,
     valid: jnp.ndarray | None = None,
+    scale=None, offset=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One fused beam-search expansion step (see kernels/search_expand.py).
 
     Args:
-      x:       (N, D) dataset.
+      x:       (N, D) dataset (fp32/bf16/int8; `scale`/`offset` are the
+               optional per-dim dequant of the stored rows — queries stay
+               fp32, only the dataset side rides the precision ladder).
       queries: (Q, D) query vectors.
       nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex;
                -1 marks an invalid entry (inactive query / empty slot).
@@ -144,7 +194,8 @@ def search_expand_ref(
     ok = nbrs >= 0
     if valid is not None:
         ok = ok & valid.astype(bool)[jnp.clip(nbrs, 0)]
-    nv = x[jnp.clip(nbrs, 0).reshape(-1)].reshape(q, r, -1).astype(jnp.float32)
+    nv = dequant_rows(x[jnp.clip(nbrs, 0).reshape(-1)], scale,
+                      offset).reshape(q, r, -1)
     diff = queries.astype(jnp.float32)[:, None, :] - nv
     d = jnp.sum(diff * diff, axis=-1)
     d = jnp.where(ok, d, jnp.inf)

@@ -48,14 +48,30 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _rng_round_kernel(ids_pref, xrow_ref, ids_ref, dists_ref, si_ref, sj_ref,
-                      dst_ref, src_ref, dij_ref, kill_ref, vecs_ref,
-                      *, r: int, p: int):
+def _rng_round_kernel(ids_pref, xrow_ref, *refs, r: int, p: int,
+                      quantized: bool):
     """Grid: (N, R). Step (v, rr) DMAs x[ids[v, rr]] into vecs row rr; the
-    pair evaluation runs once per vertex on the final row."""
+    pair evaluation runs once per vertex on the final row.
+
+    `quantized` is the precision ladder's trace-time flag (DESIGN.md §8):
+    the int8 variant carries (1, D) scale/offset operands and each DMA'd
+    row is dequantized as it lands in the fp32 VMEM scratch — the same
+    elementwise formula as `ref.dequant_rows`, so bitwise oracle parity is
+    preserved.  The float rungs compile without the extra operands.
+    """
     del ids_pref  # consumed by the index_maps
+    if quantized:
+        (scale_ref, offset_ref, ids_ref, dists_ref, si_ref, sj_ref,
+         dst_ref, src_ref, dij_ref, kill_ref, vecs_ref) = refs
+    else:
+        scale_ref = offset_ref = None
+        (ids_ref, dists_ref, si_ref, sj_ref,
+         dst_ref, src_ref, dij_ref, kill_ref, vecs_ref) = refs
     rr = pl.program_id(1)
-    vecs_ref[pl.ds(rr, 1), :] = xrow_ref[...].astype(jnp.float32)
+    row = xrow_ref[...].astype(jnp.float32)
+    if quantized:
+        row = row * scale_ref[...] + offset_ref[...]
+    vecs_ref[pl.ds(rr, 1), :] = row
 
     @pl.when(rr == r - 1)
     def _evaluate():
@@ -111,16 +127,21 @@ def rng_round_pallas(
     dists: jnp.ndarray,
     si: jnp.ndarray,
     sj: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    offset: jnp.ndarray | None = None,
     *,
     interpret: bool = False,
 ):
     """Fused propagation round over a (C, R) pool chunk.
 
     Args:
-      x:     (N, D) dataset (stays in HBM; rows are DMA'd on demand).
+      x:     (N, D) dataset (stays in HBM; rows are DMA'd on demand;
+             fp32/bf16/int8 storage per the precision ladder).
       ids:   (C, R) int32 pool ids, -1 = empty slot.
       dists: (C, R) f32 owner distances, +inf = empty.
       si/sj: (C, P) int32 sampled slot indices in [0, R).
+      scale/offset: optional (D,) per-dim dequant of the stored x rows,
+             fused into the row DMA (None = float storage).
 
     Returns (dst (C,P) i32, src (C,P) i32, dij (C,P) f32, kill (C,R) bool):
     the redirect requests (dst = -1 where the pair missed) and the slot
@@ -129,21 +150,31 @@ def rng_round_pallas(
     c, r = ids.shape
     n, d = x.shape
     p = si.shape[1]
+    quantized = scale is not None
     ids_safe = jnp.clip(ids.astype(jnp.int32), 0, n - 1)
 
     # Lane-align D for the real TPU lowering only: the zero columns keep
     # distances mathematically unchanged but alter the fp32 reduction tree
     # (~1e-7 relative), so interpret mode — the bitwise-parity harness —
-    # skips the pad.
+    # skips the pad.  scale/offset pad with ZEROS, so padded columns of a
+    # quantized x dequant to exactly 0.
     pad_d = 0 if interpret else (-d) % 128
     xp = jnp.pad(x, ((0, 0), (0, pad_d))) if pad_d else x
     dp = d + pad_d
+
+    q_ops, q_specs = (), []
+    if quantized:
+        q_ops = tuple(
+            jnp.pad(v.astype(jnp.float32).reshape(1, d), ((0, 0), (0, pad_d)))
+            for v in (scale, offset))
+        q_specs = [pl.BlockSpec((1, dp), lambda v, rr, ids_ref: (0, 0))] * 2
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,               # ids_safe lands as index operand
         grid=(c, r),
         in_specs=[
             pl.BlockSpec((1, dp), lambda v, rr, ids_ref: (ids_ref[v, rr], 0)),
+        ] + q_specs + [
             pl.BlockSpec((1, r), lambda v, rr, ids_ref: (v, 0)),
             pl.BlockSpec((1, r), lambda v, rr, ids_ref: (v, 0)),
             pl.BlockSpec((1, p), lambda v, rr, ids_ref: (v, 0)),
@@ -158,7 +189,7 @@ def rng_round_pallas(
         scratch_shapes=[pltpu.VMEM((r, dp), jnp.float32)],
     )
     dst, src, dij, kill = pl.pallas_call(
-        functools.partial(_rng_round_kernel, r=r, p=p),
+        functools.partial(_rng_round_kernel, r=r, p=p, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((c, p), jnp.int32),
@@ -167,6 +198,6 @@ def rng_round_pallas(
             jax.ShapeDtypeStruct((c, r), jnp.int32),
         ],
         interpret=interpret,
-    )(ids_safe, xp, ids.astype(jnp.int32), dists.astype(jnp.float32),
+    )(ids_safe, xp, *q_ops, ids.astype(jnp.int32), dists.astype(jnp.float32),
       si.astype(jnp.int32), sj.astype(jnp.int32))
     return dst, src, dij, kill.astype(bool)

@@ -62,7 +62,8 @@ from repro.kernels.ref import HASH_PROBES
 
 
 def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
-                          r: int, h: int, probes: int, masked: bool):
+                          r: int, h: int, probes: int, masked: bool,
+                          quantized: bool):
     """Grid: (Q, R). Step (q, rr) DMAs x[nbrs[q, rr]] (and, in the masked
     variant, the neighbor's validity bit) into scratch row rr; the distance
     + probe evaluation runs once per query on the final row.
@@ -70,16 +71,26 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
     `masked` is a trace-time flag: the static-index path (valid=None)
     compiles WITHOUT the validity operand, scratch, or per-step DMA — the
     dynamic feature costs the hot serving loop nothing unless it is used.
+    `quantized` (the precision ladder, DESIGN.md §8) likewise: the int8
+    variant carries (1, D) scale/offset operands and dequantizes each
+    DMA'd neighbor row as it lands in the fp32 scratch — the same
+    elementwise formula as `ref.dequant_rows` (bitwise oracle parity);
+    queries stay fp32.
     """
     del nbrs_pref  # consumed by the index_maps
-    if masked:
-        (vrow_ref, q_ref, nbrs_ref, tab_ref,
-         ids_ref, d_ref, fresh_ref, vecs_ref, live_ref) = refs
-    else:
-        (q_ref, nbrs_ref, tab_ref,
-         ids_ref, d_ref, fresh_ref, vecs_ref) = refs
+    it = iter(refs)
+    vrow_ref = next(it) if masked else None
+    scale_ref, offset_ref = ((next(it), next(it)) if quantized
+                             else (None, None))
+    q_ref, nbrs_ref, tab_ref, ids_ref, d_ref, fresh_ref = (
+        next(it), next(it), next(it), next(it), next(it), next(it))
+    vecs_ref = next(it)
+    live_ref = next(it) if masked else None
     rr = pl.program_id(1)
-    vecs_ref[pl.ds(rr, 1), :] = xrow_ref[...].astype(jnp.float32)
+    row = xrow_ref[...].astype(jnp.float32)
+    if quantized:
+        row = row * scale_ref[...] + offset_ref[...]
+    vecs_ref[pl.ds(rr, 1), :] = row
     if masked:
         live_ref[pl.ds(rr, 1), :] = vrow_ref[...]
 
@@ -127,14 +138,18 @@ def search_expand_pallas(
     nbrs: jnp.ndarray,
     table: jnp.ndarray,
     valid: jnp.ndarray | None = None,
+    scale: jnp.ndarray | None = None,
+    offset: jnp.ndarray | None = None,
     *,
     interpret: bool = False,
 ):
     """Fused expansion step over a (Q, R) neighbor-id batch.
 
     Args:
-      x:       (N, D) dataset (stays in HBM; rows are DMA'd on demand).
-      queries: (Q, D) query vectors.
+      x:       (N, D) dataset (stays in HBM; rows are DMA'd on demand;
+               fp32/bf16/int8 storage per the precision ladder).
+      queries: (Q, D) query vectors (always fp32 — only the stored dataset
+               side rides the ladder).
       nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex,
                -1 = invalid (inactive query or empty graph slot).
       table:   (Q, H) int32 open-addressed visited table, -1 = empty slot.
@@ -142,6 +157,8 @@ def search_expand_pallas(
                core/dynamic.py).  Stays in HBM next to x; each neighbor's
                bit rides the same per-row DMA schedule as its vector, so
                the mask probe adds no extra pass.  None = all live.
+      scale/offset: optional (D,) per-dim dequant of the stored x rows,
+               fused into the row DMA (None = float storage).
 
     Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool) — identical
     to `ref.search_expand_ref`.
@@ -150,6 +167,7 @@ def search_expand_pallas(
     n, d = x.shape
     h = table.shape[1]
     masked = valid is not None  # trace-time: None is a distinct jit trace
+    quantized = scale is not None
     nbrs_safe = jnp.clip(nbrs.astype(jnp.int32), 0, n - 1)
     # wrap-extend the table so every (mod H) probe window is contiguous:
     # ext[base + l] == table[(base + l) % H] for base < H, l < PROBES
@@ -160,6 +178,8 @@ def search_expand_pallas(
     he = h + HASH_PROBES
 
     # Lane-align D for the real TPU lowering only (see module docstring).
+    # scale/offset pad with ZEROS, so padded columns of a quantized x
+    # dequant to exactly 0 and contribute nothing to any distance.
     pad_d = 0 if interpret else (-d) % 128
     xp = jnp.pad(x, ((0, 0), (0, pad_d))) if pad_d else x
     qp = jnp.pad(queries, ((0, 0), (0, pad_d))) if pad_d else queries
@@ -172,12 +192,19 @@ def search_expand_pallas(
     mask_scratch = [pltpu.VMEM((r, 1), jnp.int32)] if masked else []
     mask_ops = ((valid.astype(jnp.int32).reshape(n, 1),) if masked else ())
 
+    q_ops, q_specs = (), []
+    if quantized:
+        q_ops = tuple(
+            jnp.pad(v.astype(jnp.float32).reshape(1, d), ((0, 0), (0, pad_d)))
+            for v in (scale, offset))
+        q_specs = [pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (0, 0))] * 2
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,               # nbrs_safe lands as index operand
         grid=(qn, r),
         in_specs=[
             pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (nb_ref[q, rr], 0)),
-        ] + mask_specs + [
+        ] + mask_specs + q_specs + [
             pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, he), lambda q, rr, nb_ref: (q, 0)),
@@ -191,7 +218,8 @@ def search_expand_pallas(
     )
     ids, dists, fresh = pl.pallas_call(
         functools.partial(_search_expand_kernel, r=r, h=h,
-                          probes=HASH_PROBES, masked=masked),
+                          probes=HASH_PROBES, masked=masked,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((qn, r), jnp.int32),
@@ -199,5 +227,5 @@ def search_expand_pallas(
             jax.ShapeDtypeStruct((qn, r), jnp.int32),
         ],
         interpret=interpret,
-    )(nbrs_safe, xp, *mask_ops, qp, nbrs.astype(jnp.int32), tab_ext)
+    )(nbrs_safe, xp, *mask_ops, *q_ops, qp, nbrs.astype(jnp.int32), tab_ext)
     return ids, dists, fresh.astype(bool)

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --index /tmp/sift.idx.npz \
         [--batches 8] [--ef 48] [--backend pallas] [--visited hashed] \
-        [--visited-cap 512] [--shards 4] [--mutable --churn 64]
+        [--visited-cap 512] [--shards 4] [--precision int8] \
+        [--mutable --churn 64]
 
 `--backend` selects the kernel path of the fused expansion step
 (`kernels/search_expand.py`; off-TPU "pallas" degrades to interpret mode).
@@ -12,6 +13,13 @@ per-query open-addressed table — the memory-flat serving configuration
 devices via `core.distributed.distributed_search` (bitwise-identical to
 the single-device search; on a CPU box force host devices first with
 XLA_FLAGS=--xla_force_host_platform_device_count=K).
+
+`--precision {fp32,bf16,int8}` selects the traversal-tier storage (the
+precision ladder, DESIGN.md §8): bf16 halves and int8 quarters the
+bytes/vector the bandwidth-bound expansion kernel reads.  At int8 the
+final ef candidates are re-ranked against the fp32 tier (exact
+distances) unless `--no-rescore` is given; the printed `bpv=` column is
+the traversal-tier bytes/vector.
 
 `--mutable` wraps the loaded index in a `core.dynamic.DynamicIndex` and
 interleaves mutation requests with the query batches: every batch first
@@ -31,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import brute_force_knn, recall_at_k
+from repro.core import brute_force_knn, recall_at_k, vecstore
 from repro.core.distributed import distributed_search
 from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.pools import Pool
@@ -60,6 +68,15 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard query batches over this many devices "
                          "(0 = single-device search)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="traversal-tier vector storage (DESIGN.md §8); "
+                         "int8 rescores the final candidates against the "
+                         "fp32 tier unless --no-rescore")
+    ap.add_argument("--no-rescore", action="store_true",
+                    help="skip the fp32 rescoring pass (quantized "
+                         "precisions only; shows the raw traversal-space "
+                         "recall)")
     ap.add_argument("--mutable", action="store_true",
                     help="serve through a DynamicIndex with per-batch "
                          "insert/delete churn (see module docstring)")
@@ -84,6 +101,9 @@ def main():
     if not args.mutable and (args.churn is not None
                              or args.refine_rounds is not None):
         ap.error("--churn/--refine-rounds only apply with --mutable")
+    if args.no_rescore and args.precision == "fp32":
+        ap.error("--no-rescore only applies with --precision bf16/int8 "
+                 "(fp32 traversal is already exact)")
 
     if args.backend is not None:
         ops.set_backend(args.backend)
@@ -96,7 +116,13 @@ def main():
         serve_mutable(args, x, jnp.asarray(blob["dists"]), ids)
         return
 
-    entry = medoid(x)
+    # the precision ladder (DESIGN.md §8): traversal reads the compact
+    # tier; the fp32 array stays around only as the rescoring tier
+    store = vecstore.encode(x, args.precision)
+    xt = x if args.precision == "fp32" else store
+    rescore = x if (args.precision != "fp32" and not args.no_rescore) else None
+    bpv = store.bytes_per_vector()
+    entry = medoid(xt)
 
     mesh = None
     if args.shards > 0:
@@ -106,16 +132,18 @@ def main():
         # device_put inside distributed_search then no-ops on x/ids
         from jax.sharding import NamedSharding, PartitionSpec
         rep = NamedSharding(mesh, PartitionSpec())
-        x = jax.device_put(x, rep)
+        xt = jax.tree.map(lambda a: jax.device_put(a, rep), xt)
         ids = jax.device_put(ids, rep)
         entry = jax.device_put(entry, rep)
+        if rescore is not None:
+            rescore = jax.device_put(rescore, rep)
 
     def run_batch(q):
         kw = dict(k=args.k, ef=args.ef, entry=entry, visited=args.visited,
-                  visited_cap=args.visited_cap)
+                  visited_cap=args.visited_cap, rescore=rescore)
         if mesh is None:
-            return search(x, ids, q, **kw)
-        return distributed_search(mesh, ("data",), x, ids, q, **kw)
+            return search(xt, ids, q, **kw)
+        return distributed_search(mesh, ("data",), xt, ids, q, **kw)
 
     lat, recs = [], []
     for b in range(args.batches + 1):
@@ -135,6 +163,8 @@ def main():
     print(f"qps={qps:.0f}  p50={sorted(lat)[len(lat)//2]*1e3:.1f}ms  "
           f"recall@{args.k}={sum(recs)/len(recs):.3f}  "
           f"backend={ops.effective_backend()}  visited={args.visited}  "
+          f"precision={args.precision}  bpv={bpv:.0f}  "
+          f"rescore={int(rescore is not None)}  "
           f"shards={max(args.shards, 1)}")
 
 
@@ -150,7 +180,8 @@ def serve_mutable(args, x, dists, ids):
     """
     rounds = args.refine_rounds if args.refine_rounds is not None else 2
     idx = DynamicIndex(x, Pool(ids, dists),
-                       DynamicConfig(refine_rounds=rounds))
+                       DynamicConfig(refine_rounds=rounds,
+                                     precision=args.precision))
     churn = args.churn if args.churn is not None else 64
     mut_lat, lat, recs = [], [], []
     for b in range(args.batches + 1):
@@ -166,7 +197,8 @@ def serve_mutable(args, x, dists, ids):
                                    args.batch_size)
         t0 = time.perf_counter()
         res = idx.search(q, k=args.k, ef=args.ef, visited=args.visited,
-                         visited_cap=args.visited_cap)
+                         visited_cap=args.visited_cap,
+                         rescore=False if args.no_rescore else None)
         res.dists.block_until_ready()
         dt = time.perf_counter() - t0
         if b == 0:
@@ -183,7 +215,7 @@ def serve_mutable(args, x, dists, ids):
           f"live={idx.n_live}  tomb={idx.tombstone_fraction:.2f}  "
           f"rounds={idx.rounds_run}  "
           f"backend={ops.effective_backend()}  visited={args.visited}  "
-          f"mutable=1")
+          f"precision={args.precision}  mutable=1")
 
 
 if __name__ == "__main__":

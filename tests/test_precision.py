@@ -1,0 +1,311 @@
+"""Precision-ladder test tier (ISSUE 4, DESIGN.md §8).
+
+Four contracts:
+
+  * the bf16 and int8 variants of every row-gather kernel (rng_round,
+    search_expand, gather_l2) match their ref.py oracles BITWISE in
+    interpret mode — the fused in-kernel dequant is the same elementwise
+    formula as `ref.dequant_rows`, so quantization adds no parity slack;
+  * the pairwise kernel's quantized variants match at its established
+    tolerance (its D-slab accumulation makes the reduction tree differ
+    from the whole-row oracle by design — same convention as the fp32
+    suite in tests/test_kernels.py);
+  * the int8 quantizer obeys its analytic bounds (hypothesis property
+    tier): round-trip error |x - dq(q(x))| <= scale/2 per dimension, and
+    monotone 1-D distance ordering (quantization is a monotone map, so
+    collinear same-side orderings survive);
+  * a graph BUILT through the ref backend and one built through the
+    interpret backend produce identical pool ids at every precision —
+    the cross-backend determinism the dispatch layer promises and the
+    pre-ladder suite never checked.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.core import grnnd, vecstore as VS
+from repro.core.search import _table_insert, search
+from repro.data import synthetic
+from repro.kernels import ops, ref
+from repro.kernels.gather_l2 import gather_sqdist_pallas
+from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas
+from repro.kernels.rng_round import rng_round_pallas
+from repro.kernels.search_expand import search_expand_pallas
+
+PRECS = ("bf16", "int8")
+
+
+def _store(seed: int, n: int, d: int, precision: str) -> VS.VectorStore:
+    x = synthetic.vector_dataset(jax.random.PRNGKey(seed), n, d,
+                                 n_clusters=max(2, n // 16))
+    return VS.encode(x, precision)
+
+
+# ---------------------------------------------------------------------------
+# kernel/oracle parity per precision (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", PRECS)
+@pytest.mark.parametrize("n,d,c,r,p", [(64, 12, 10, 8, 6), (50, 33, 7, 5, 9)])
+def test_rng_round_parity(precision, n, d, c, r, p):
+    st_ = _store(11, n, d, precision)
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(1), 4)
+    ids = jax.random.randint(k1, (c, r), -1, n)
+    lut = jnp.abs(jax.random.normal(k2, (n,)))
+    dists = jnp.where(ids >= 0, lut[jnp.clip(ids, 0)], jnp.inf)
+    si = jax.random.randint(k3, (c, p), 0, r)
+    sj = jax.random.randint(k4, (c, p), 0, r)
+    got = rng_round_pallas(st_.data, ids, dists, si, sj,
+                           st_.scale, st_.offset, interpret=True)
+    want = jax.jit(ref.rng_round_ref)(st_.data, ids, dists, si, sj,
+                                      st_.scale, st_.offset)
+    for name, g, w in zip(("dst", "src", "dij", "kill"), got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{precision}/{name}")
+
+
+@pytest.mark.parametrize("precision", PRECS)
+@pytest.mark.parametrize("qn,r,n,d,h", [(8, 10, 64, 12, 32), (5, 7, 50, 33, 16)])
+def test_search_expand_parity(precision, qn, r, n, d, h):
+    st_ = _store(13, n, d, precision)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (qn, d))
+    nbrs = jax.random.randint(k2, (qn, r), -1, n)
+    tab = _table_insert(jnp.full((qn, h), -1, jnp.int32), jnp.where(
+        jax.random.bernoulli(k3, 0.5, (qn, r)), nbrs, -1))
+    got = search_expand_pallas(st_.data, q, nbrs, tab, None,
+                               st_.scale, st_.offset, interpret=True)
+    want = jax.jit(ref.search_expand_ref)(st_.data, q, nbrs, tab, None,
+                                          st_.scale, st_.offset)
+    for name, g, w in zip(("ids", "dists", "fresh"), got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{precision}/{name}")
+
+
+@pytest.mark.parametrize("precision", PRECS)
+@pytest.mark.parametrize("n,d,m", [(64, 12, 40), (30, 65, 17)])
+def test_gather_l2_parity(precision, n, d, m):
+    st_ = _store(17, n, d, precision)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    ni = jax.random.randint(k1, (m,), 0, n)
+    nj = jax.random.randint(k2, (m,), 0, n)
+    got = gather_sqdist_pallas(st_.data, ni, nj, st_.scale, st_.offset,
+                               interpret=True)
+    want = jax.jit(ref.gather_sqdist_ref)(st_.data, ni, nj,
+                                          st_.scale, st_.offset)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                  err_msg=precision)
+
+
+@pytest.mark.parametrize("precision", PRECS)
+@pytest.mark.parametrize("m,n,d", [(17, 33, 12), (64, 64, 128)])
+def test_pairwise_parity(precision, m, n, d):
+    """Quantized-side pairwise vs oracle, at the suite's established
+    tolerance (tests/test_kernels.py): both sides see bitwise-identical
+    dequantized values, only the D-slab accumulation order differs."""
+    st_ = _store(19, n, d, precision)
+    q = jax.random.normal(jax.random.PRNGKey(4), (m, d))
+    got = pairwise_sqdist_pallas(q, st_.data, None, None,
+                                 st_.scale, st_.offset,
+                                 bm=32, bn=32, bk=128, interpret=True)
+    want = ref.pairwise_sqdist_ref(q, st_.data,
+                                   y_scale=st_.scale, y_offset=st_.offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5 * d, err_msg=precision)
+
+
+def test_ops_dispatch_accepts_stores():
+    """Every ops entry point takes a VectorStore on both backends and the
+    two backends agree (bitwise for the row-gather ops)."""
+    st_ = _store(23, 48, 16, "int8")
+    q = jax.random.normal(jax.random.PRNGKey(5), (6, 16))
+    ids = jax.random.randint(jax.random.PRNGKey(6), (6, 8), -1, 48)
+    lut = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (48,)))
+    dists = jnp.where(ids >= 0, lut[jnp.clip(ids, 0)], jnp.inf)
+    si = jax.random.randint(jax.random.PRNGKey(8), (6, 4), 0, 8)
+    sj = jax.random.randint(jax.random.PRNGKey(9), (6, 4), 0, 8)
+    tab = jnp.full((6, 16), -1, jnp.int32)
+    ni = jax.random.randint(jax.random.PRNGKey(10), (12,), 0, 48)
+    nj = jax.random.randint(jax.random.PRNGKey(11), (12,), 0, 48)
+
+    outs = {}
+    for b in ("ref", "interpret"):
+        with ops.backend(b):
+            # one jit per op with operands passed as ARGUMENTS — the
+            # library's calling convention and the parity contract's
+            # common-jit-context requirement (closure-captured operands
+            # would let XLA constant-fold the oracle's dequant with a
+            # different evaluator); per-iteration lambdas keep the
+            # backend traces separate
+            outs[b] = (
+                jax.jit(lambda *a: ops.pairwise_sqdist(*a))(q, st_),
+                jax.jit(lambda *a: ops.rng_propagation_round(*a))(
+                    st_, ids, dists, si, sj),
+                jax.jit(lambda *a: ops.search_expand(*a))(st_, q, ids, tab),
+                jax.jit(lambda *a: ops.gather_sqdist(*a))(st_, ni, nj),
+            )
+    np.testing.assert_allclose(np.asarray(outs["ref"][0]),
+                               np.asarray(outs["interpret"][0]),
+                               rtol=1e-5, atol=1e-4)
+    for g, w in zip(outs["interpret"][1], outs["ref"][1]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    for g, w in zip(outs["interpret"][2], outs["ref"][2]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(outs["interpret"][3]),
+                                  np.asarray(outs["ref"][3]))
+
+
+# ---------------------------------------------------------------------------
+# quantizer properties
+# ---------------------------------------------------------------------------
+
+def test_store_layout_and_bytes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 24))
+    s32 = VS.encode(x, "fp32")
+    s16 = VS.encode(x, "bf16")
+    s8 = VS.encode(x, "int8")
+    assert s32.data.dtype == jnp.float32 and s32.scale is None
+    assert s16.data.dtype == jnp.bfloat16 and s16.scale is None
+    assert s8.data.dtype == jnp.int8
+    assert s8.scale.shape == (24,) and s8.offset.shape == (24,)
+    # 1 byte/dim + per-dim scale/offset held once for the whole store
+    assert s8.bytes_per_vector() == 24.0
+    assert s32.bytes_per_vector() == 4 * 24.0
+    assert s16.bytes_per_vector() == 2 * 24.0
+    assert s32.bytes_per_vector() / s16.bytes_per_vector() >= 2.0
+    assert s32.bytes_per_vector() / s8.bytes_per_vector() >= 4.0
+    assert s8.precision == "int8" and s16.precision == "bf16"
+
+
+def test_quantizer_constant_dimension_exact():
+    x = jnp.concatenate([jnp.full((8, 3), 2.5),
+                         jax.random.normal(jax.random.PRNGKey(1), (8, 2))],
+                        axis=1)
+    st_ = VS.quantize_int8(x)
+    np.testing.assert_allclose(np.asarray(st_.dequant()[:, :3]), 2.5)
+
+
+def test_frozen_params_insert_roundtrip():
+    """with_rows quantizes with the FROZEN scale/offset; in-range rows obey
+    the same error bound, out-of-range rows clip to the range edge."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (40, 8))
+    st_ = VS.quantize_int8(x)
+    new = x[:4] * 0.5  # strictly in range
+    st2 = st_.with_rows(jnp.arange(4), new)
+    err = np.abs(np.asarray(new) - np.asarray(st2.take(jnp.arange(4))))
+    assert (err <= np.asarray(st_.scale)[None, :] / 2 + 1e-6).all()
+    far = jnp.full((1, 8), 1e6)
+    st3 = st_.with_rows(jnp.array([0]), far)
+    assert int(jnp.max(jnp.abs(st3.data[0].astype(jnp.int32)))) <= 127
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(2, 40), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_quantizer_roundtrip_bound(n, d, seed):
+    """|x - dq(q(x))| <= scale/2 per dim, for the corpus the params were
+    fit on (every value in [min, max], so no clipping)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 10.0
+    st_ = VS.quantize_int8(x)
+    err = np.abs(np.asarray(x) - np.asarray(st_.dequant()))
+    bound = np.asarray(st_.scale)[None, :] / 2
+    assert (err <= bound * (1 + 1e-5) + 1e-7).all(), (err.max(), bound.max())
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(3, 50), seed=st.integers(0, 2**31 - 1))
+def test_quantizer_monotone_1d(n, seed):
+    """Quantization is monotone: sorted 1-D inputs stay sorted after the
+    round-trip, so distances measured from the minimum point are
+    non-decreasing in the original order (weak ordering preservation)."""
+    x = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed), (n,))).reshape(
+        n, 1)
+    dq = np.asarray(VS.quantize_int8(x).dequant())[:, 0]
+    assert (np.diff(dq) >= 0).all()
+    d0 = np.abs(dq - dq[0])
+    assert (np.diff(d0) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# cross-backend build determinism (the dispatch-drift guard)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def det_dataset():
+    return synthetic.make_preset(jax.random.PRNGKey(0), "tiny", 192)
+
+
+@pytest.mark.parametrize("precision", ("fp32", "bf16", "int8"))
+def test_build_determinism_ref_vs_interpret(det_dataset, precision):
+    """The same build through REPRO_KERNEL_BACKEND=ref and through the
+    interpret-mode Pallas kernels must produce IDENTICAL pool ids at every
+    precision — guards the ops dispatch layer against silent drift between
+    the oracle and kernel paths (the suite previously only checked this
+    for the fp32 search)."""
+    x = det_dataset
+    xt = x if precision == "fp32" else VS.encode(x, precision)
+    cfg = grnnd.GRNNDConfig(s=6, r=8, t1=2, t2=2, pairs_per_vertex=8)
+    pools = {}
+    for b in ("ref", "interpret"):
+        with ops.backend(b):
+            pools[b] = grnnd.build_graph(jax.random.PRNGKey(7), xt, cfg)
+    np.testing.assert_array_equal(np.asarray(pools["ref"].ids),
+                                  np.asarray(pools["interpret"].ids),
+                                  err_msg=precision)
+
+
+def test_dynamic_index_rebases_pool_into_traversal_space(det_dataset):
+    """Wrapping an fp32-BUILT pool at int8 precision must re-base every
+    stored pool distance into the traversal space — d(x̂_i, x̂_j), the
+    values later RNG kills and merges compare against (§8.3) — not keep
+    the fp32-space build distances."""
+    x = det_dataset
+    cfg = grnnd.GRNNDConfig(s=6, r=8, t1=2, t2=2, pairs_per_vertex=8)
+    pool = grnnd.build_graph(jax.random.PRNGKey(7), x, cfg)  # fp32 build
+    from repro.core.dynamic import DynamicConfig, DynamicIndex
+    idx = DynamicIndex(x, pool, DynamicConfig(precision="int8"))
+    n = x.shape[0]
+    ids = np.asarray(idx.pool.ids[:n])
+    dists = np.asarray(idx.pool.dists[:n])
+    xq = np.asarray(idx.store.dequant()[:n])
+    for i in range(0, n, 37):
+        for slot, v in enumerate(ids[i]):
+            if v < 0:
+                assert np.isinf(dists[i, slot])
+                continue
+            want = float(((xq[i] - xq[v]) ** 2).sum())
+            np.testing.assert_allclose(dists[i, slot], want, rtol=1e-5,
+                                       atol=1e-6)
+        dv = dists[i][ids[i] >= 0]
+        assert (np.diff(dv) >= -1e-7).all()  # re-sorted pool invariant
+
+
+# ---------------------------------------------------------------------------
+# rescoring semantics
+# ---------------------------------------------------------------------------
+
+def test_rescore_returns_exact_fp32_distances(det_dataset):
+    """After the rescoring pass every returned (id, dist) pair is the
+    EXACT fp32 distance, and the fp32 path is unchanged by rescore=None."""
+    x = det_dataset
+    st_ = VS.encode(x, "int8")
+    cfg = grnnd.GRNNDConfig(s=6, r=8, t1=2, t2=2, pairs_per_vertex=8)
+    pool = grnnd.build_graph(jax.random.PRNGKey(7), st_, cfg)
+    q = synthetic.queries_from(jax.random.PRNGKey(8), x, 12)
+    res = search(st_, pool.ids, q, k=5, ef=16, rescore=x)
+    r_ids, r_d = np.asarray(res.ids), np.asarray(res.dists)
+    xs, qs = np.asarray(x), np.asarray(q)
+    for qi in range(12):
+        for slot, v in enumerate(r_ids[qi]):
+            if v < 0:
+                continue
+            want = float(((qs[qi] - xs[v]) ** 2).sum())
+            np.testing.assert_allclose(r_d[qi, slot], want, rtol=1e-5,
+                                       atol=1e-6)
+        dv = r_d[qi][r_ids[qi] >= 0]
+        assert (np.diff(dv) >= -1e-7).all()  # re-sorted by exact distance

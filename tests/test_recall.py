@@ -7,16 +7,27 @@ graph *or* traversal quality.  Thresholds sit ~0.04 under the currently
 measured values (disordered 0.90, ascending 0.96 on this config/seed) to
 absorb benign PRNG/jax-version drift while still catching real
 regressions.
+
+The precision-ladder floors (ISSUE 4) pin the quantized rungs to the fp32
+baseline MEASURED ON THE SAME SEEDS rather than to absolute values:
+int8 + fp32 rescoring within 1 recall point, bf16 within 0.5 — the
+DESIGN.md §8 acceptance bounds.
 """
 import jax
 import pytest
 
-from repro.core import grnnd, recall
+from repro.core import grnnd, recall, vecstore
 from repro.core.search import search
 from repro.data import synthetic
 
 EF = 48
 K = 10
+
+# the single regression build config — the precision_runs fixture derives
+# its quantized builds from the SAME object, so the fp32 baseline and the
+# quantized rungs can never drift apart under a future re-tune
+BUILD_CFG = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16,
+                              order="disordered")
 
 
 @pytest.fixture(scope="module")
@@ -32,8 +43,7 @@ def graphs(dataset):
     x, _, _ = dataset
     out = {}
     for order in ("disordered", "ascending"):
-        cfg = grnnd.GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16,
-                                order=order)
+        cfg = BUILD_CFG._replace(order=order)
         out[order] = grnnd.build_graph(jax.random.PRNGKey(2), x, cfg)
     return out
 
@@ -60,3 +70,51 @@ def test_hashed_matches_dense_recall(dataset, graphs):
     r_hashed = recall.recall_at_k(
         search(x, ids, q, k=K, ef=EF, visited="hashed").ids, gt)
     assert r_hashed >= r_dense - 0.01, (r_dense, r_hashed)
+
+
+# ---------------------------------------------------------------------------
+# precision-ladder regression floors (ISSUE 4 acceptance bounds)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def precision_runs(dataset, graphs):
+    """Build + search the same seeded pipeline at every precision rung.
+
+    The quantized graphs are BUILT on their stores (every build distance
+    in storage-precision space), searched through the same unified path;
+    int8/bf16 additionally rescore against the fp32 tier.  Returns
+    recall@10 per (precision, rescored) cell plus the fp32 baseline.
+    """
+    x, q, gt = dataset
+    out = {"fp32": recall.recall_at_k(
+        search(x, graphs["disordered"].ids, q, k=K, ef=EF).ids, gt)}
+    for prec in ("bf16", "int8"):
+        store = vecstore.encode(x, prec)
+        pool = grnnd.build_graph(jax.random.PRNGKey(2), store, BUILD_CFG)
+        out[prec] = recall.recall_at_k(
+            search(store, pool.ids, q, k=K, ef=EF).ids, gt)
+        out[prec + "+rescore"] = recall.recall_at_k(
+            search(store, pool.ids, q, k=K, ef=EF, rescore=x).ids, gt)
+    return out
+
+
+def test_int8_rescored_within_one_point_of_fp32(precision_runs):
+    """The ISSUE 4 acceptance bound: int8 traversal + fp32 rescoring stays
+    within 1 recall point of the fp32 pipeline on the same seeds."""
+    r = precision_runs
+    assert r["int8+rescore"] >= r["fp32"] - 0.01, r
+
+
+def test_bf16_within_half_point_of_fp32(precision_runs):
+    """bf16 storage (no rescoring) within 0.5 recall points of fp32."""
+    r = precision_runs
+    assert r["bf16"] >= r["fp32"] - 0.005, r
+
+
+def test_rescoring_never_hurts(precision_runs):
+    """Re-ranking the same candidate set by exact distances can only
+    improve (or preserve) recall@k — a structural property, not a seed-
+    dependent one."""
+    r = precision_runs
+    assert r["int8+rescore"] >= r["int8"] - 1e-9, r
+    assert r["bf16+rescore"] >= r["bf16"] - 1e-9, r
