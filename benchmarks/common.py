@@ -90,16 +90,18 @@ def eval_recall(x, graph_ids, q, gt, ef: int = EF):
 
 def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3,
                  backend: str | None = None, visited: str = "dense",
-                 visited_cap: int | None = None, rescore=None):
+                 visited_cap: int | None = None, rescore=None,
+                 labels=None, filter=None):
     """Compile-excluded search wall time -> (result, QPS).
 
     `backend`/`visited`/`visited_cap` select the query-path configuration
     (kernels/search_expand.py + hashed visited set); defaults reproduce the
     ambient-backend dense-bitmask search.  `x` may be a VectorStore and
-    `rescore` the fp32 tier (the precision ladder, DESIGN.md §8).
+    `rescore` the fp32 tier (the precision ladder, DESIGN.md §8);
+    `labels`/`filter` the filtered-search predicate (DESIGN.md §9).
     """
     kw = dict(k=K, ef=ef, visited=visited, visited_cap=visited_cap,
-              rescore=rescore)
+              rescore=rescore, labels=labels, filter=filter)
     with backend_scope(backend):
         res = search(x, graph_ids, q, **kw)        # compile + warm
         res.ids.block_until_ready()

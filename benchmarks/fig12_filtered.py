@@ -1,0 +1,184 @@
+"""Fig 12 (beyond the paper): filtered search — QPS and recall vs predicate
+selectivity (DESIGN.md §9).
+
+Each dataset gets synthetic per-vertex labels uniform over a 100-label
+space; each query carries a random allowed-label predicate whose label
+mass sets the SELECTIVITY (fraction of the corpus the query may return).
+The sweep runs the same filtered search at every precision rung (the
+quantized rungs rescore against the fp32 tier) and three selectivities —
+the CAGRA-class filtered-mode protocol: recall is scored against brute
+force over each query's ALLOWED subset, and every returned id must
+satisfy its predicate (the hard invariant, reported as `pred_ok=`).
+
+The effective ef follows the §9.3 over-fetch policy — raised toward
+~4·k/selectivity, clamped at N — so ~k allowed survivors exist even at
+1% selectivity; the reported QPS therefore falls as selectivity drops,
+which is the honest cost curve of route-through filtering.
+
+Row names are `fig12/<dataset>/<precision><backend-tag>/s<selectivity>`;
+every row carries the schema-validated `precision=`/`bpv=` fields plus
+`selectivity=` (benchmarks/run.py SMOKE_SCHEMA 3).
+
+    PYTHONPATH=src python benchmarks/fig12_filtered.py [--backend ref]
+    PYTHONPATH=src python benchmarks/fig12_filtered.py --smoke
+
+`--smoke` is the acceptance gate: a tiny interpret-mode sweep whose rows
+are parsed and validated in-process — all three precision rungs at all
+three selectivities, filtered recall@10 >= 0.90 against allowed-subset
+brute force, and pred_ok == 1.0 on every row — non-zero exit on any
+violation.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig12_filtered.py`
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+
+from benchmarks import common as C
+from repro.core import grnnd, labels as L, vecstore as VS
+from repro.core.search import EF_CEILING, overfetch_ef
+
+SMOKE_N = 192
+SELECTIVITIES = (0.01, 0.1, 0.5)
+N_LABELS = 100  # label-space width: 1% selectivity = exactly one label
+RECALL_FLOOR = 0.90
+
+_REC_RE = re.compile(r"(?:^|\s)recall=(\S+)")
+_PRED_RE = re.compile(r"(?:^|\s)pred_ok=(\S+)")
+
+
+def run(n: int = 3000, backend: str | None = None,
+        selectivities=SELECTIVITIES) -> list[str]:
+    """`backend` applies to build AND filtered search; the allowed-subset
+    ground truth keeps exact fp32 ambient-backend brute force."""
+    eff, tag = C.resolve_backend(backend)
+    interp = eff == "interpret"
+    if interp:
+        n = min(n, C.INTERPRET_MAX_N)
+    # fewer queries / repeats than fig11: the low-selectivity cells run
+    # at over-fetched ef (up to EF_CEILING), each costing ~10x an ef=48
+    # search — nq=96 keeps the full sweep in minutes, not hours
+    nq, repeats = (32, 1) if interp else (96, 1)
+    # interpret mode steps kernel grids from Python: the narrower fast-tier
+    # graph shape keeps the sweep inside the smoke-job budget (full-scale
+    # runs use the fig10/fig11 build shape)
+    cfg = (grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16)
+           if interp else
+           grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                             pairs_per_vertex=24))
+
+    rows = []
+    datasets = list(C.bench_datasets(n=n, nq=nq).items())
+    if interp:
+        # one dataset keeps the 3-rung x 3-selectivity sweep tractable
+        # (same budget rationale as fig11's smoke)
+        datasets = datasets[:1]
+    for name, (x, q, gt) in datasets:
+        n_act = x.shape[0]
+        vlab = jax.random.randint(jax.random.PRNGKey(0xf12), (n_act,), 0,
+                                  N_LABELS)
+        lstore = L.encode_labels(vlab, N_LABELS)
+        for prec in VS.PRECISIONS:
+            store = VS.encode(x, prec)
+            xt = x if prec == "fp32" else store
+            rescore = None if prec == "fp32" else x
+            with C.backend_scope(backend):
+                pool, t_build = C.timed_build(xt, cfg)
+            for sel in selectivities:
+                fw = L.random_query_filters(jax.random.PRNGKey(0xf13), nq,
+                                            N_LABELS, sel)
+                ef = overfetch_ef(n_act, C.K, sel, ef=32 if interp else C.EF)
+                res, qps = C.timed_search(xt, pool.ids, q, ef=ef,
+                                          repeats=repeats, backend=backend,
+                                          rescore=rescore,
+                                          labels=lstore.words, filter=fw)
+                # ground truth over the allowed subset: ambient backend,
+                # exact fp32 — never the timed/interpret path
+                gt_f = L.filtered_brute_force(x, q, fw, lstore.words, C.K)
+                rec = L.filtered_recall_at_k(res.ids, gt_f)
+                pred = L.predicate_fraction(res.ids, fw, lstore.words)
+                rows.append(C.row(
+                    f"fig12/{name}/{prec}{tag}/s{sel:g}", 1.0 / qps,
+                    f"recall={rec:.3f} pred_ok={pred:.3f} qps={qps:.0f} "
+                    f"ef={ef} selectivity={sel:g} build_s={t_build:.2f} "
+                    f"rescore={int(rescore is not None)} backend={eff}",
+                    precision=prec,
+                    bytes_per_vector=store.bytes_per_vector()))
+    return rows
+
+
+def validate_filtered_rows(parsed: list[dict]) -> None:
+    """The fig12 acceptance gate (shared with benchmarks/run.py).
+
+    Raises ValueError unless, per dataset, every precision rung appears at
+    every sweep selectivity, and EVERY fig12 row holds the two contracts:
+    filtered recall@10 >= 0.90 against allowed-subset brute force, and
+    pred_ok == 1.0 (100% of returned ids satisfy their predicate — the
+    hard invariant, on all precision rungs).
+    """
+    fig12 = [p for p in parsed if p["name"].startswith("fig12/")]
+    if not fig12:
+        raise ValueError("no fig12 rows to validate")
+    seen: dict[str, set] = {}
+    for p in fig12:
+        ds = p["name"].split("/")[1]
+        if p.get("selectivity") is None:
+            raise ValueError(f"fig12 row lacks selectivity=: {p['name']}")
+        seen.setdefault(ds, set()).add((p["precision"], p["selectivity"]))
+        rec = _REC_RE.search(p["derived"])
+        pred = _PRED_RE.search(p["derived"])
+        if not rec or not pred:
+            raise ValueError(f"fig12 row lacks recall=/pred_ok=: {p!r}")
+        if float(rec.group(1)) < RECALL_FLOOR:
+            raise ValueError(
+                f"{p['name']}: filtered recall {rec.group(1)} below the "
+                f"{RECALL_FLOOR} floor")
+        if float(pred.group(1)) != 1.0:
+            raise ValueError(
+                f"{p['name']}: pred_ok={pred.group(1)} — returned ids "
+                "violate their predicate (hard invariant)")
+    want = {(prec, float(s)) for prec in VS.PRECISIONS
+            for s in SELECTIVITIES}
+    for ds, got in seen.items():
+        if not want <= got:
+            raise ValueError(
+                f"fig12/{ds} is missing (precision, selectivity) cells: "
+                f"{sorted(want - got)}")
+
+
+def smoke() -> None:
+    """Tiny interpret-mode sweep + in-process contract validation."""
+    from benchmarks.run import parse_row
+    rows = run(n=SMOKE_N, backend="interpret")
+    for r in rows:
+        print(r, flush=True)
+    validate_filtered_rows([parse_row(r) for r in rows])
+    print("# fig12 smoke: recall floor + predicate invariant OK",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for build + filtered search "
+                         "(default: current REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--n", type=int, default=3000,
+                    help="vectors per dataset (interpret runs are capped "
+                         f"at {C.INTERPRET_MAX_N})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode sweep, self-validating "
+                         "(non-zero exit on recall/predicate violations)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(n=args.n, backend=args.backend):
+            print(row, flush=True)

@@ -23,21 +23,27 @@ import re
 import sys
 import time
 
-ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "roofline")
+ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+       "roofline")
 
 # the artifact contract: bump ONLY with a matching update to every consumer
 # of the perf trajectory (EXPERIMENTS.md §Tables tooling)
 # schema 2: rows carry `precision=` and `bpv=` (bytes/vector of the
 # traversal tier) so the trajectory can distinguish dtype regressions from
 # algorithmic ones (ISSUE 4)
-SMOKE_SCHEMA = 2
+# schema 3: filtered-search rows (fig12) carry `selectivity=` — validated
+# as a float in [0, 1] wherever present, required on every fig12 row —
+# so the trajectory can slice the filtered cost curve per selectivity
+# (ISSUE 5)
+SMOKE_SCHEMA = 3
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
 _PRECISIONS = ("fp32", "bf16", "int8")
 _PREC_RE = re.compile(r"(?:^|\s)precision=(\S+)")
 _BPV_RE = re.compile(r"(?:^|\s)bpv=(\S+)")
+_SEL_RE = re.compile(r"(?:^|\s)selectivity=(\S+)")
 # families the smoke artifact must always cover (one per serving surface)
-SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "roofline")
+SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "roofline")
 
 
 def _module(name: str):
@@ -55,6 +61,8 @@ def _module(name: str):
         from benchmarks import fig10_churn as m
     elif name == "fig11":
         from benchmarks import fig11_precision as m
+    elif name == "fig12":
+        from benchmarks import fig12_filtered as m
     elif name == "roofline":
         from benchmarks import roofline as m
     else:
@@ -69,6 +77,10 @@ def parse_row(row: str) -> dict:
     `bpv=<float>` (traversal-tier bytes/vector; 0.0 for cells with no
     vector storage, e.g. analytic roofline LLM cells) — both are lifted
     into top-level artifact fields.
+
+    Schema 3: an optional `selectivity=<float>` (filtered-search rows) is
+    lifted as well; where present it must parse as a float in [0, 1].
+    The fig12 validator additionally REQUIRES it on every fig12 row.
     """
     parts = row.split(",", 2)
     if len(parts) != 3:
@@ -86,8 +98,15 @@ def parse_row(row: str) -> dict:
     bpv_val = float(bpv.group(1))
     if bpv_val < 0:
         raise ValueError(f"negative bytes/vector: {row!r}")
+    sel = _SEL_RE.search(derived)
+    sel_val = None
+    if sel:
+        sel_val = float(sel.group(1))
+        if not 0.0 <= sel_val <= 1.0:
+            raise ValueError(f"selectivity outside [0, 1]: {row!r}")
     return {"name": name, "us_per_call": float(us), "derived": derived,
-            "precision": prec.group(1), "bytes_per_vector": bpv_val}
+            "precision": prec.group(1), "bytes_per_vector": bpv_val,
+            "selectivity": sel_val}
 
 
 def validate_rows(parsed: list[dict]) -> None:
@@ -102,7 +121,9 @@ def validate_rows(parsed: list[dict]) -> None:
     if errors:
         raise ValueError(f"benchmark families crashed: {errors}")
     from benchmarks.fig11_precision import validate_precision_rows
+    from benchmarks.fig12_filtered import validate_filtered_rows
     validate_precision_rows(parsed)
+    validate_filtered_rows(parsed)
 
 
 def run_smoke(out_path: str) -> None:
@@ -113,6 +134,7 @@ def run_smoke(out_path: str) -> None:
         ("fig6", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig10", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig11", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig12", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("roofline", lambda m: m.run()),
     )
     for name, call in calls:

@@ -46,5 +46,12 @@ GIST_SMALL = ANNDatasetConfig(
     "gist-small", n=8_000, d=960, n_queries=200,
     build=GRNNDConfig(s=12, r=24, t1=4, t2=4, rho=0.6, pairs_per_vertex=24))
 
+# seconds-scale CPU build: the launch-CLI end-to-end smoke tier
+# (tests/test_serving.py subprocess-runs build_index -> serve on it)
+SIFT_DEMO = ANNDatasetConfig(
+    "sift-demo", n=1_500, d=128, n_queries=100,
+    build=GRNNDConfig(s=8, r=16, t1=3, t2=3, pairs_per_vertex=16))
+
 DATASETS = {c.name: c for c in
-            [SIFT1M, DEEP1M, GIST1M, SIFT_SMALL, DEEP_SMALL, GIST_SMALL]}
+            [SIFT1M, DEEP1M, GIST1M, SIFT_SMALL, DEEP_SMALL, GIST_SMALL,
+             SIFT_DEMO]}

@@ -12,6 +12,9 @@ from repro.core.distributed import (
     sharded_apply_requests)
 from repro.core.vecstore import (
     PRECISIONS, VectorStore, encode, quantize_int8)
+from repro.core.labels import (
+    LabelStore, encode_labels, encode_label_sets, filtered_brute_force,
+    filtered_recall_at_k)
 
 __all__ = [
     "GRNNDConfig", "build_graph", "build_graph_with_stats", "update_round",
@@ -22,4 +25,6 @@ __all__ = [
     "sharded_build_graph", "make_sharded_builder", "distributed_search",
     "sharded_apply_requests",
     "PRECISIONS", "VectorStore", "encode", "quantize_int8",
+    "LabelStore", "encode_labels", "encode_label_sets",
+    "filtered_brute_force", "filtered_recall_at_k",
 ]

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
 
 from repro.compat import shard_map
 
+from repro.core import labels as L
 from repro.core import pools as P
 from repro.core import vecstore as VS
 from repro.core.grnnd import (
@@ -207,7 +208,7 @@ def sharded_build_graph(
 def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                        max_steps: int, visited: str, visited_cap: int | None,
                        has_valid: bool, quantized: bool, has_rescore: bool,
-                       backend: str):
+                       has_filter: bool, backend: str):
     """One jitted shard_map per (mesh, axes, search-config) — cached so
     repeated serving batches reuse the compiled executable instead of
     re-tracing per call.  `has_valid` selects the tombstone-masked variant
@@ -216,9 +217,14 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
     DESIGN.md §8) likewise select variants with the store's scale/offset
     and the fp32 rescore tier as extra replicated operands — the store is
     passed FLATTENED (data, scale, offset) so every shard_map operand is a
-    plain array and the in_specs stay structural.  `backend` is unused in
-    the body but part of the cache key: the inner search dispatches
-    kernels at trace time (same contract as search._search_impl)."""
+    plain array and the in_specs stay structural.  `has_filter` (filtered
+    search, DESIGN.md §9) selects the predicate variant: the (N, W) vertex
+    label words replicate like x, while the (Q, W) per-query allowed words
+    shard WITH the queries — and the flag lives in this cache key, so a
+    filtered batch can never reuse an unfiltered executable (or vice
+    versa).  `backend` is unused in the body but part of the cache key:
+    the inner search dispatches kernels at trace time (same contract as
+    search._search_impl)."""
     del backend
     qspec = PSpec(axes)
     rspec = PSpec()
@@ -229,12 +235,16 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                 else x_r)
         rescore = next(it) if has_rescore else None
         valid = next(it) if has_valid else None
+        vwords = next(it) if has_filter else None
+        fwords = next(it) if has_filter else None
         return search(x_in, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
                       entry=entry_r, visited=visited, visited_cap=visited_cap,
-                      valid=valid, rescore=rescore)
+                      valid=valid, rescore=rescore,
+                      labels=vwords, filter=fwords)
 
     n_extra = 2 * quantized + has_rescore + has_valid
-    in_specs = (rspec, rspec, qspec, rspec) + (rspec,) * n_extra
+    in_specs = ((rspec, rspec, qspec, rspec) + (rspec,) * n_extra
+                + ((rspec, qspec) if has_filter else ()))
     return jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=in_specs,
@@ -258,6 +268,8 @@ def distributed_search(
     visited_cap: int | None = None,
     valid: jnp.ndarray | None = None,
     rescore=None,
+    labels=None,
+    filter=None,
 ) -> SearchResult:
     """Query-sharded beam search over the mesh.
 
@@ -278,6 +290,13 @@ def distributed_search(
     replicated here like x and the graph (query sharding); under VERTEX
     sharding (the build layout) the mask shards with the pools instead —
     each shard owns the validity of its own vertex rows.
+
+    `labels`/`filter` are the filtered-search predicate (core/labels.py,
+    DESIGN.md §9): the packed vertex words replicate with the corpus; the
+    per-query allowed words are a PER-QUERY payload and shard (and pad)
+    with the queries.  Filtering stays embarrassingly parallel — the
+    route-through beam and result heap are per-query state — so shard
+    invariance holds bitwise exactly as in the unfiltered path.
     """
     axes = tuple(axes)
     n_shards = 1
@@ -289,22 +308,33 @@ def distributed_search(
     if entry is None:
         entry = medoid(x, valid)  # once, replicated — not once per shard
 
+    vwords = fwords = None
+    if filter is not None:
+        assert labels is not None, "filtered search needs a label store"
+        vwords = L.store_words(labels)
+        fwords = L.query_words(filter, vwords.shape[1])
+
     qn = queries.shape[0]
     pad = (-qn) % n_shards
     if pad:
         queries = jnp.concatenate(
             [queries, jnp.broadcast_to(queries[:1], (pad, queries.shape[1]))])
+        if fwords is not None:  # the pad rows' predicates ride along
+            fwords = jnp.concatenate(
+                [fwords, jnp.broadcast_to(fwords[:1], (pad, fwords.shape[1]))])
 
     xd, xs, xo = VS.parts(x)
     quantized = xs is not None
     sharded = _sharded_search_fn(mesh, axes, k, ef, max_steps, visited,
                                  visited_cap, valid is not None,
                                  quantized, rescore is not None,
+                                 filter is not None,
                                  ops.effective_backend())
     rep = NamedSharding(mesh, PSpec())
     xd = jax.device_put(xd, rep)
     graph_ids = jax.device_put(graph_ids, rep)
-    queries = jax.device_put(queries, NamedSharding(mesh, PSpec(axes)))
+    qsharding = NamedSharding(mesh, PSpec(axes))
+    queries = jax.device_put(queries, qsharding)
     extra = ()
     if quantized:
         extra += (jax.device_put(xs, rep), jax.device_put(xo, rep))
@@ -312,6 +342,9 @@ def distributed_search(
         extra += (jax.device_put(rescore, rep),)
     if valid is not None:
         extra += (jax.device_put(valid, rep),)
+    if filter is not None:
+        extra += (jax.device_put(vwords, rep),
+                  jax.device_put(fwords, qsharding))
     res = sharded(xd, graph_ids, queries, entry, *extra)
     if pad:
         res = SearchResult(res.ids[:qn], res.dists[:qn], res.n_expanded[:qn])

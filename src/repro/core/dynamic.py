@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import labels as L
 from repro.core import pools as P
 from repro.core import vecstore as VS
 from repro.core.grnnd import GRNNDConfig, _pair_requests_chunk
@@ -148,6 +149,15 @@ class DynamicIndex:
       pool   (C, R)       — neighbor ids/dists (ids are internal slots)
       valid  (C,)   bool  — False for tombstones AND unallocated pads
       labels (C,)   i64   — external label per slot (host array, -1 = pad)
+      vlabels (C,)  i32   — optional per-vertex FILTER label (the attribute
+                            predicates match on, core/labels.py — distinct
+                            from the external-identity `labels` above);
+                            -1 = unlabeled/pad, matched by no predicate.
+                            The label SPACE (`n_labels`, hence the packed
+                            word count W) is frozen at construction, like
+                            the quantizer's scale/offset; label values
+                            ride through insert, tombstone delete,
+                            compact(), and capacity doubling.
 
     `size` is the allocated prefix (live + tombstoned), `n_live` the live
     count.  `rounds_run` counts localized propagation rounds — the unit the
@@ -163,7 +173,9 @@ class DynamicIndex:
 
     def __init__(self, x: jnp.ndarray, pool: P.Pool,
                  cfg: DynamicConfig = DynamicConfig(),
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None,
+                 vertex_labels: jnp.ndarray | None = None,
+                 n_labels: int | None = None):
         n, d = x.shape
         assert pool.ids.shape[0] == n
         assert cfg.precision in VS.PRECISIONS, cfg.precision
@@ -205,6 +217,20 @@ class DynamicIndex:
         self.labels = np.full((cap,), -1, np.int64)
         self.labels[:n] = np.arange(n, dtype=np.int64)
         self._next_label = n
+        if vertex_labels is None:
+            assert n_labels is None, "n_labels without vertex_labels"
+            self.n_labels = None
+            self.vlabels = None
+        else:
+            vl = np.asarray(vertex_labels, np.int32)
+            assert vl.shape == (n,), vl.shape
+            self.n_labels = (n_labels if n_labels is not None
+                             else int(vl.max()) + 1)
+            assert vl.max() < self.n_labels, \
+                f"label {vl.max()} outside the frozen space {self.n_labels}"
+            self.vlabels = np.full((cap,), -1, np.int32)
+            self.vlabels[:n] = vl
+        self._vwords: jnp.ndarray | None = None  # packed cache (lazy)
 
     # -- bookkeeping ------------------------------------------------------
 
@@ -252,20 +278,36 @@ class DynamicIndex:
         self.valid = jnp.pad(self.valid, (0, grow))
         self.labels = np.concatenate(
             [self.labels, np.full((grow,), -1, np.int64)])
+        if self.vlabels is not None:
+            self.vlabels = np.concatenate(
+                [self.vlabels, np.full((grow,), -1, np.int32)])
+            self._vwords = None
 
     # -- mutation ---------------------------------------------------------
 
-    def insert(self, xs: jnp.ndarray) -> np.ndarray:
+    def insert(self, xs: jnp.ndarray,
+               vertex_labels: jnp.ndarray | None = None) -> np.ndarray:
         """Insert a batch of vectors; returns their (B,) external labels.
 
         Seed neighbors come from the existing search beam; the symmetric
         edges and `cfg.refine_rounds` localized propagation rounds then
         stitch the batch into the RNG structure without touching the
         untouched bulk of the graph.
+
+        `vertex_labels` are the batch's (B,) filter labels (only on a
+        label-carrying index; values must fit the frozen label space).
+        Omitted, the batch lands unlabeled (-1): searchable unfiltered,
+        matched by no predicate.
         """
         xs = jnp.asarray(xs, jnp.float32)
         b = xs.shape[0]
         assert b > 0 and xs.shape[1] == self.x.shape[1]
+        if vertex_labels is not None:
+            assert self.vlabels is not None, \
+                "this index was built without vertex labels"
+            vertex_labels = np.asarray(vertex_labels, np.int32)
+            assert vertex_labels.shape == (b,)
+            assert vertex_labels.max() < self.n_labels
         cfg = self.cfg
         cap = cfg.incoming_cap if cfg.incoming_cap is not None else self.r
         seed_k = min(cfg.seed_k, self.r)
@@ -304,6 +346,10 @@ class DynamicIndex:
         if self.store is not None:
             self.store = self.store.with_rows(new_slots, xs)
         self.valid = self.valid.at[new_slots].set(True)
+        if self.vlabels is not None:
+            if vertex_labels is not None:
+                self.vlabels[self.size:self.size + b] = vertex_labels
+            self._vwords = None
         self.labels[self.size:self.size + b] = np.arange(
             self._next_label, self._next_label + b, dtype=np.int64)
         out_labels = self.labels[self.size:self.size + b].copy()
@@ -411,6 +457,11 @@ class DynamicIndex:
         labels_new = np.full((cap,), -1, np.int64)
         labels_new[:n_new] = self.labels[:size][keep]
         self.labels = labels_new
+        if self.vlabels is not None:
+            vl_new = np.full((cap,), -1, np.int32)
+            vl_new[:n_new] = self.vlabels[:size][keep]
+            self.vlabels = vl_new
+            self._vwords = None
         if self._entry is not None:
             e = int(self._entry)
             self._entry = (jnp.int32(new_of_old[e])
@@ -420,31 +471,67 @@ class DynamicIndex:
 
     # -- queries ----------------------------------------------------------
 
+    def label_words(self) -> jnp.ndarray:
+        """The packed (C, W) vertex label-bitset operand over the FULL
+        padded buffer (pads/unlabeled rows are all-zero words, matched by
+        no predicate).  Cached; invalidated by insert/compact/growth —
+        deletes don't touch it (tombstones are the `valid` mask's job)."""
+        assert self.vlabels is not None, \
+            "this index was built without vertex labels"
+        if self._vwords is None:
+            self._vwords = L.pack_ids(jnp.asarray(self.vlabels),
+                                      self.n_labels)
+        return self._vwords
+
+    def _query_words(self, filter) -> jnp.ndarray:
+        assert self.vlabels is not None, \
+            "this index was built without vertex labels"
+        return L.query_words(filter, L.n_words(self.n_labels))
+
     def search(self, queries: jnp.ndarray, *, k: int = 10, ef: int = 64,
                max_steps: int = 512, visited: str = "dense",
                visited_cap: int | None = None,
-               rescore: bool | None = None) -> SearchResult:
+               rescore: bool | None = None,
+               filter=None, overfetch: int = 4) -> SearchResult:
         """Beam search over the live graph; result ids are external labels.
 
         Traversal reads the compact tier; at quantized precision the final
         ef candidates are re-ranked against the fp32 tier (`rescore=None`
         = auto: on iff the traversal tier is quantized).
+
+        `filter` is the optional per-query label predicate (core/labels.py
+        forms: (Q, W) packed words, (Q, L) bool mask, or (Q,) label ids).
+        Tombstoned vertices stay excluded from traversal (valid mask);
+        filtered-out LIVE vertices stay traversable but unreturnable
+        (route-through) — the two masks compose independently.
         """
         if rescore is None:
             rescore = self.store is not None
+        fwords = None if filter is None else self._query_words(filter)
         res = search(self._tier(), self.pool.ids, queries, k=k, ef=ef,
                      max_steps=max_steps, entry=self.entry(),
                      visited=visited, visited_cap=visited_cap,
                      valid=self.valid,
-                     rescore=self.x if rescore else None)
+                     rescore=self.x if rescore else None,
+                     labels=None if filter is None else self.label_words(),
+                     filter=fwords, overfetch=overfetch)
         ids = np.asarray(res.ids)
         lab = np.where(ids >= 0, self.labels[np.clip(ids, 0, None)],
                        np.int64(-1))
         return SearchResult(jnp.asarray(lab), res.dists, res.n_expanded)
 
-    def exact_knn(self, queries: jnp.ndarray, k: int) -> jnp.ndarray:
-        """Brute-force ground truth over the LIVE corpus, in label space."""
+    def exact_knn(self, queries: jnp.ndarray, k: int,
+                  filter=None) -> jnp.ndarray:
+        """Brute-force ground truth over the LIVE corpus, in label space;
+        with `filter`, over the live AND allowed corpus (slots past the
+        allowed count hold -1) — the filtered-recall denominator."""
         d = _masked_knn_dists(self.x, self.valid, jnp.asarray(queries))
+        if filter is not None:
+            fwords = self._query_words(filter)
+            hit = jnp.any(
+                (self.label_words()[None, :, :] & fwords[:, None, :]) != 0,
+                axis=-1)
+            d = jnp.where(hit, d, jnp.inf)
         vals, idx = jax.lax.top_k(-d, k)
         idx = np.asarray(idx)
         lab = np.where(np.isfinite(np.asarray(-vals)),

@@ -1,0 +1,226 @@
+"""Label store + packed predicate masks for filtered ANN search (DESIGN.md §9).
+
+Production ANN traffic is rarely unconstrained: multi-tenant serving,
+time-windowed corpora, and access-controlled retrieval all ask for the
+nearest neighbors *among vectors matching a predicate*.  This module holds
+the vertex-side attributes and the query-side predicates that the fused
+expansion kernel (kernels/search_expand.py) evaluates per neighbor:
+
+  * **vertex side** — `LabelStore`: a per-vertex int32 label array (one
+    categorical label per vertex, -1 = unlabeled) packed into a (N, W)
+    int32 **bitset** (bit `l` of the row = "vertex carries label l",
+    W = ceil(n_labels / 32) words).  Multi-label vertices pack the same
+    way from an (N, L) membership mask (`encode_label_sets`).  The store
+    is FROZEN alongside the `VectorStore`: the label-space width W is
+    fixed at encode time, exactly like the quantizer's scale/offset, so
+    every compiled search variant keys on one static word count.
+  * **query side** — a (Q, W) int32 allowed-bitset: query q may *return*
+    vertex v iff `any(words[v] & allowed[q])`.  `query_words` normalizes
+    the accepted predicate forms — a (Q,) single allowed label id, a
+    (Q, L) boolean label mask, or pre-packed (Q, W) words — to the one
+    operand layout the kernel sees.
+
+The packed test is pure int32 bitwise math: evaluating it inside the
+Pallas kernel and inside the ref.py oracle produces bit-identical flags,
+so the filter preserves the kernel/oracle bitwise-parity contract
+(tests/test_filtered.py), on every precision rung.
+
+Semantics are ROUTE-THROUGH, not exclude (GGNN's observation that graph
+connectivity must survive masking): a filtered-out vertex stays fully
+traversable — expanded, scored, inserted into the beam — and is only
+masked out of the *result* heap.  Contrast the dynamic index's tombstone
+`valid` mask, which removes a vertex from traversal entirely.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+WORD_BITS = 32
+
+
+def n_words(n_labels: int) -> int:
+    """Packed words per bitset row for an `n_labels`-wide label space."""
+    return max(1, -(-int(n_labels) // WORD_BITS))
+
+
+def pack_bits(member: jnp.ndarray) -> jnp.ndarray:
+    """(B, L) boolean label-membership mask -> (B, W) packed int32 words.
+
+    Bit `l % 32` of word `l // 32` is membership in label l.  Distinct
+    powers of two sum exactly (two's complement makes the l % 32 == 31
+    bit land on the int32 sign bit — a valid bit pattern), so the pack is
+    deterministic and invertible.
+    """
+    member = jnp.asarray(member).astype(bool)
+    b, l = member.shape
+    w = n_words(l)
+    pad = w * WORD_BITS - l
+    if pad:
+        member = jnp.pad(member, ((0, 0), (0, pad)))
+    bits = member.reshape(b, w, WORD_BITS).astype(jnp.int32)
+    weights = jnp.left_shift(jnp.int32(1),
+                             jnp.arange(WORD_BITS, dtype=jnp.int32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.int32)
+
+
+def pack_ids(ids: jnp.ndarray, n_labels: int) -> jnp.ndarray:
+    """(B,) int32 label ids -> (B, W) one-hot packed words; id -1 -> all
+    zeros (an unlabeled vertex / a match-nothing predicate)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    w = n_words(n_labels)
+    word = jnp.clip(ids, 0) // WORD_BITS
+    bit = jnp.left_shift(jnp.int32(1),
+                         (jnp.clip(ids, 0) % WORD_BITS).astype(jnp.int32))
+    rows = jnp.zeros((ids.shape[0], w), jnp.int32)
+    rows = rows.at[jnp.arange(ids.shape[0]), word].set(bit)
+    return jnp.where((ids >= 0)[:, None], rows, 0)
+
+
+class LabelStore(NamedTuple):
+    """Frozen per-vertex label attributes.
+
+    words  (N, W) int32 — packed label bitset (the kernel operand; one
+           (1, W) row is DMA'd per expanded neighbor, on the same per-row
+           schedule as the vector and the tombstone bit)
+    labels (N,)   int32 — the single label per vertex for stores built
+           with `encode_labels`; None for multi-label stores, where the
+           bitset is the only representation.
+    """
+    words: jnp.ndarray
+    labels: jnp.ndarray | None = None
+
+    @property
+    def n(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def w(self) -> int:
+        return self.words.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Largest representable label id + 1 (the frozen label space)."""
+        return self.w * WORD_BITS
+
+
+def encode_labels(labels: jnp.ndarray, n_labels: int | None = None
+                  ) -> LabelStore:
+    """Freeze a (N,) int32 single-label-per-vertex array into a store.
+
+    `n_labels` fixes the label-space width (and therefore W); it defaults
+    to max(labels) + 1 but should be given explicitly when the corpus may
+    not exercise every label (the dynamic index passes its frozen value).
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    if n_labels is None:
+        n_labels = int(jnp.max(labels)) + 1
+    assert n_labels >= 1
+    assert int(jnp.max(labels)) < n_labels, \
+        f"label {int(jnp.max(labels))} outside the frozen space {n_labels}"
+    return LabelStore(pack_ids(labels, n_labels), labels)
+
+
+def encode_label_sets(member: jnp.ndarray) -> LabelStore:
+    """Freeze an (N, L) boolean multi-label membership mask into a store."""
+    return LabelStore(pack_bits(member), None)
+
+
+def store_words(labels) -> jnp.ndarray:
+    """The (N, W) kernel operand of a LabelStore or raw packed array."""
+    return labels.words if isinstance(labels, LabelStore) else jnp.asarray(
+        labels, jnp.int32)
+
+
+def query_words(filter, w: int) -> jnp.ndarray:
+    """Normalize a per-query predicate to the (Q, W) packed operand.
+
+    Accepts (Q, W) pre-packed int32 words (validated against the store
+    width), a (Q, L) boolean allowed-label mask (L <= W * 32), or a (Q,)
+    int32 single allowed label id per query.
+    """
+    filter = jnp.asarray(filter)
+    if filter.ndim == 1:
+        out = pack_ids(filter, w * WORD_BITS)
+    elif filter.dtype == bool:
+        out = pack_bits(filter)
+        assert out.shape[1] <= w, \
+            f"predicate label space wider than the store: {out.shape[1]} > {w}"
+        if out.shape[1] < w:
+            out = jnp.pad(out, ((0, 0), (0, w - out.shape[1])))
+    else:
+        out = filter.astype(jnp.int32)
+        assert out.ndim == 2 and out.shape[1] == w, \
+            f"packed predicate must be (Q, {w}), got {out.shape}"
+    return out
+
+
+def allowed_mask(ids: jnp.ndarray, fwords: jnp.ndarray,
+                 vwords: jnp.ndarray) -> jnp.ndarray:
+    """Per-result predicate evaluation: allowed[q, j] for ids (Q, J) against
+    query words (Q, W) and vertex words (N, W); ids < 0 -> False."""
+    lw = vwords[jnp.clip(ids, 0)]                       # (Q, J, W)
+    hit = jnp.any((lw & fwords[:, None, :]) != 0, axis=-1)
+    return (ids >= 0) & hit
+
+
+def predicate_fraction(ids: jnp.ndarray, fwords: jnp.ndarray,
+                       vwords: jnp.ndarray) -> float:
+    """Fraction of returned (non -1) ids that satisfy their query's
+    predicate — the serving hard invariant (must be 1.0)."""
+    ids = jnp.asarray(ids)
+    ok = allowed_mask(ids, fwords, vwords)
+    n_ret = jnp.sum(ids >= 0)
+    return float(jnp.where(n_ret > 0, jnp.sum(ok) / jnp.maximum(n_ret, 1),
+                           1.0))
+
+
+def filtered_brute_force(x, queries: jnp.ndarray, fwords: jnp.ndarray,
+                         vwords: jnp.ndarray, k: int,
+                         chunk: int = 1024) -> jnp.ndarray:
+    """Exact k nearest ALLOWED rows per query; slots beyond the allowed
+    count hold -1 (ground truth for filtered recall).  `x` may be a
+    VectorStore (ground truth in that rung's dequantized space)."""
+    outs = []
+    qn = queries.shape[0]
+    for lo in range(0, qn, chunk):
+        q_c, f_c = queries[lo:lo + chunk], fwords[lo:lo + chunk]
+        d = ops.pairwise_sqdist(q_c, x)                     # (c, N)
+        hit = jnp.any((vwords[None, :, :] & f_c[:, None, :]) != 0, axis=-1)
+        d = jnp.where(hit, d, jnp.inf)
+        vals, idx = jax.lax.top_k(-d, k)
+        outs.append(jnp.where(jnp.isfinite(vals), idx, -1).astype(jnp.int32))
+    return jnp.concatenate(outs, axis=0)
+
+
+def filtered_recall_at_k(found_ids, true_ids) -> float:
+    """Recall against a -1-padded filtered ground truth: the denominator
+    counts only real (>= 0) truth entries, so low-selectivity queries with
+    fewer than k allowed vertices score out of what actually exists."""
+    f = np.asarray(found_ids)
+    t = np.asarray(true_ids)
+    hits, total = 0, 0
+    for row_f, row_t in zip(f, t):
+        want = set(row_t[row_t >= 0].tolist())
+        hits += len(set(row_f[row_f >= 0].tolist()) & want)
+        total += len(want)
+    return hits / max(total, 1)
+
+
+def random_query_filters(key: jax.Array, q: int, n_labels: int,
+                         selectivity: float) -> jnp.ndarray:
+    """(Q, W) predicates each allowing ~selectivity·n_labels labels (>= 1),
+    drawn uniformly without replacement — the benchmark/serving synthetic
+    workload (labels uniform over vertices => vertex selectivity tracks
+    label selectivity)."""
+    m = max(1, round(selectivity * n_labels))
+    perm = jax.vmap(lambda k: jax.random.permutation(k, n_labels))(
+        jax.random.split(key, q))                        # (Q, n_labels)
+    member = jnp.zeros((q, n_labels), bool)
+    member = member.at[jnp.arange(q)[:, None], perm[:, :m]].set(True)
+    return pack_bits(member)

@@ -20,7 +20,12 @@ The production pieces (DESIGN.md §6):
   * the per-step beam merge is the deduplicating `ops.topr_merge` primitive
     the build path already uses — no full (Q, ef+R) argsort per step, and
     re-entering duplicates (possible under hash capacity misses) are
-    absorbed instead of crowding the beam.
+    absorbed instead of crowding the beam;
+  * filtered search (`labels=`/`filter=`, core/labels.py, DESIGN.md §9)
+    evaluates a per-query label predicate inside the same fused expansion
+    op and accumulates predicate-passing vertices in a separate result
+    heap — the beam itself stays unfiltered (route-through), so graph
+    connectivity survives masking.
 
 Query sharding over a device mesh lives in `core.distributed.
 distributed_search` (x and graph replicated, queries sharded — searches are
@@ -29,11 +34,13 @@ embarrassingly parallel over queries).
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import labels as L
 from repro.core import vecstore as VS
 from repro.kernels import ops
 from repro.kernels.ref import visited_probe_positions
@@ -63,6 +70,20 @@ def medoid(x, valid: jnp.ndarray | None = None) -> jnp.ndarray:
          / jnp.maximum(jnp.sum(v), 1.0))[None, :]
     d = jnp.where(valid, ops.pairwise_sqdist(c, x)[0], jnp.inf)
     return jnp.argmin(d).astype(jnp.int32)
+
+
+EF_CEILING = 512  # §9.3: past this, O(ef²) beam maintenance dominates
+
+
+def overfetch_ef(n: int, k: int, selectivity: float, ef: int) -> int:
+    """The §9.3 low-selectivity over-fetch policy, in one place (serving
+    and benchmarks must stay in sync with what DESIGN.md documents and
+    fig12 validates): widen the beam toward ~4·k/selectivity so ~k
+    allowed survivors exist, clamped at the corpus size and at the
+    practical ceiling — beyond it the per-step `topr_merge` dedup
+    (O(ef²) work and mask memory) costs more than the recall it buys,
+    and traffic that needs more wants a pre-partitioned index."""
+    return max(ef, min(n, math.ceil(4 * k / selectivity), EF_CEILING))
 
 
 def default_visited_cap(ef: int) -> int:
@@ -112,6 +133,8 @@ def _search_impl(
     entry: jnp.ndarray,
     valid: jnp.ndarray | None,
     rescore,
+    vwords: jnp.ndarray | None,
+    fwords: jnp.ndarray | None,
     *,
     k: int,
     ef: int,
@@ -127,6 +150,10 @@ def _search_impl(
     n, r = graph_ids.shape
     q = queries.shape[0]
     qrows = jnp.arange(q, dtype=jnp.int32)
+    # trace-time flag, same idiom as the tombstone mask: the unfiltered
+    # path compiles WITHOUT the predicate operands, the result heap, or
+    # the extra per-step merge (tests/test_filtered.py jaxpr check)
+    filtered = fwords is not None
 
     queries = queries.astype(jnp.float32)
     d_entry = ops.rowwise_sqdist(
@@ -141,6 +168,18 @@ def _search_impl(
     expanded = jnp.zeros((q, ef), bool)
     n_exp = jnp.zeros((q,), jnp.int32)
 
+    if filtered:
+        # result heap (route-through, DESIGN.md §9): the BEAM keeps every
+        # live vertex so the walk can route through filtered-out regions;
+        # only this separate heap — what the caller sees — applies the
+        # predicate.  Seed it with the entry iff the entry itself passes.
+        e_ok = jnp.any((vwords[entry][None, :] & fwords) != 0, axis=-1)
+        e_ok = e_ok & jnp.isfinite(d_entry)
+        res_ids = jnp.full((q, ef), -1, jnp.int32).at[:, 0].set(
+            jnp.where(e_ok, entry, -1))
+        res_dists = jnp.full((q, ef), jnp.inf, jnp.float32).at[:, 0].set(
+            jnp.where(e_ok, d_entry, jnp.inf))
+
     entry_col = jnp.broadcast_to(entry, (q, 1)).astype(jnp.int32)
     if visited == "dense":
         vstate = jnp.zeros((q, n), bool).at[:, entry].set(True)
@@ -152,12 +191,11 @@ def _search_impl(
         lookup = None
 
     def cond(state):
-        cand_ids, cand_dists, expanded, vstate, n_exp, steps = state
-        frontier = (cand_ids >= 0) & ~expanded
-        return (steps < max_steps) & jnp.any(frontier)
+        frontier = (state[0] >= 0) & ~state[2]
+        return (state[5] < max_steps) & jnp.any(frontier)
 
     def body(state):
-        cand_ids, cand_dists, expanded, vstate, n_exp, steps = state
+        cand_ids, cand_dists, expanded, vstate, n_exp, steps = state[:6]
         frontier_d = jnp.where((cand_ids >= 0) & ~expanded, cand_dists, jnp.inf)
         sel = jnp.argmin(frontier_d, axis=-1)                      # (Q,)
         active = jnp.isfinite(jnp.min(frontier_d, axis=-1))        # (Q,)
@@ -168,11 +206,16 @@ def _search_impl(
         nbrs = jnp.where(active[:, None] & (nbrs >= 0), nbrs, -1)
 
         # fused: gather neighbor vectors, query->neighbor distances, the
-        # visited probe, and the tombstone-validity probe in one pass (dense
-        # mode probes the empty dummy table and refines `fresh` with the
-        # exact bitmask below)
-        nbrs, dq, fresh = ops.search_expand(
-            x, queries, nbrs, vstate if lookup is None else lookup, valid)
+        # visited probe, the tombstone-validity probe, and (filtered) the
+        # label-predicate test in one pass (dense mode probes the empty
+        # dummy table and refines `fresh` with the exact bitmask below)
+        out = ops.search_expand(
+            x, queries, nbrs, vstate if lookup is None else lookup, valid,
+            vwords if filtered else None, fwords if filtered else None)
+        if filtered:
+            nbrs, dq, fresh, allowed = out
+        else:
+            nbrs, dq, fresh = out
         if visited == "dense":
             seen = vstate[qrows[:, None], jnp.clip(nbrs, 0)]
             fresh = fresh & ~seen
@@ -186,7 +229,9 @@ def _search_impl(
         # merge: keep ef best of (candidate list ∪ fresh neighbors) via the
         # deduplicating top-R primitive; candidates precede fresh entries,
         # so a re-entering duplicate keeps its original (possibly expanded)
-        # beam slot
+        # beam slot.  Route-through: the beam takes fresh neighbors
+        # REGARDLESS of the predicate — a filtered-out vertex must remain
+        # a stepping stone to allowed ones beyond it.
         all_ids = jnp.concatenate([cand_ids, jnp.where(fresh, nbrs, -1)],
                                   axis=-1)
         all_d = jnp.concatenate([cand_dists, dq], axis=-1)
@@ -200,11 +245,29 @@ def _search_impl(
             new_ids[:, :, None] == exp_src[:, None, :], axis=-1)
         new_expanded = new_expanded | (new_ids < 0)
 
-        return new_ids, new_d, new_expanded, vstate, n_exp, steps + 1
+        next_state = (new_ids, new_d, new_expanded, vstate, n_exp, steps + 1)
+        if filtered:
+            # a vertex enters the result heap exactly once — on its fresh
+            # sighting, with its real distance, iff the predicate admits
+            # it; re-sightings under hash-capacity misses are absorbed by
+            # the merge dedup like everywhere else
+            keep = fresh & allowed
+            res_ids, res_dists = ops.topr_merge(
+                jnp.concatenate([state[6], jnp.where(keep, nbrs, -1)],
+                                axis=-1),
+                jnp.concatenate([state[7], jnp.where(keep, dq, jnp.inf)],
+                                axis=-1),
+                ef)
+            next_state = next_state + (res_ids, res_dists)
+        return next_state
 
     state = (cand_ids, cand_dists, expanded, vstate, n_exp, jnp.int32(0))
-    cand_ids, cand_dists, expanded, vstate, n_exp, _ = jax.lax.while_loop(
-        cond, body, state)
+    if filtered:
+        state = state + (res_ids, res_dists)
+    state = jax.lax.while_loop(cond, body, state)
+    cand_ids, cand_dists, n_exp = state[0], state[1], state[4]
+    out_ids, out_dists = ((state[6], state[7]) if filtered
+                          else (cand_ids, cand_dists))
 
     if rescore is not None:
         # fp32 rescoring pass (DESIGN.md §8.3): traversal ranked the beam
@@ -212,14 +275,16 @@ def _search_impl(
         # candidates with EXACT distances against the rescore tier.  One
         # (Q, ef, D) gather — ef·D bytes per query, tiny next to the
         # traversal traffic — then the usual dedup/sort merge primitive
-        # (ids are already unique, so this is a pure re-sort).
-        rv = VS.take(rescore, jnp.clip(cand_ids, 0))           # (Q, ef, D)
+        # (ids are already unique, so this is a pure re-sort).  Under a
+        # filter this runs on the result heap, which holds ONLY allowed
+        # ids — rescoring is restricted to the allowed set by construction.
+        rv = VS.take(rescore, jnp.clip(out_ids, 0))            # (Q, ef, D)
         diff = queries[:, None, :] - rv
         d_exact = jnp.sum(diff * diff, axis=-1)
-        d_exact = jnp.where(cand_ids >= 0, d_exact, jnp.inf)
-        cand_ids, cand_dists = ops.topr_merge(cand_ids, d_exact, ef)
+        d_exact = jnp.where(out_ids >= 0, d_exact, jnp.inf)
+        out_ids, out_dists = ops.topr_merge(out_ids, d_exact, ef)
 
-    return SearchResult(cand_ids[:, :k], cand_dists[:, :k], n_exp)
+    return SearchResult(out_ids[:, :k], out_dists[:, :k], n_exp)
 
 
 def search(
@@ -235,6 +300,9 @@ def search(
     visited_cap: int | None = None,
     valid: jnp.ndarray | None = None,
     rescore=None,
+    labels=None,
+    filter=None,
+    overfetch: int = 4,
 ) -> SearchResult:
     """Search the graph for the k nearest vertices to each query row.
 
@@ -259,10 +327,32 @@ def search(
     store) from which the final ef candidates are re-ranked with exact
     distances.  None (the default) returns traversal-space distances
     unchanged — the fp32 path stays bit-for-bit.
+
+    `labels`/`filter` select FILTERED search (core/labels.py, DESIGN.md
+    §9): `labels` is a `LabelStore` (or raw (N, W) packed vertex words)
+    and `filter` the per-query predicate — (Q, W) packed allowed words, a
+    (Q, L) boolean label mask, or (Q,) single allowed label ids.  The
+    traversal ROUTES THROUGH filtered-out vertices (they stay in the beam
+    with their real distances, preserving graph connectivity under
+    masking) while a separate result heap admits only predicate-passing
+    vertices — every returned id satisfies its query's predicate, a hard
+    invariant.  `overfetch` widens the working ef to at least
+    `overfetch * k` under a filter so k allowed survivors remain at
+    moderate selectivity; at LOW selectivity callers should additionally
+    raise `ef` toward ~k/selectivity (the over-fetch policy, DESIGN.md
+    §9.3).  None (the default) keeps the unfiltered path bit-for-bit —
+    the predicate operands are absent from the compiled program entirely.
     """
     assert ef >= k
     assert visited in ("dense", "hashed"), visited
     assert visited_cap is None or visited_cap > 0, visited_cap
+    if filter is not None:
+        assert labels is not None, "filtered search needs a label store"
+        vwords = L.store_words(labels)
+        fwords = L.query_words(filter, vwords.shape[1])
+        ef = max(ef, overfetch * k)
+    else:
+        vwords = fwords = None  # labels alone is inert (no predicate given)
     if entry is None:
         entry = medoid(x, valid)
     if visited == "dense":
@@ -270,6 +360,7 @@ def search(
     else:
         cap = visited_cap if visited_cap is not None else default_visited_cap(ef)
     return _search_impl(x, graph_ids, queries, entry, valid, rescore,
+                        vwords, fwords,
                         k=k, ef=ef, max_steps=max_steps,
                         visited=visited, visited_cap=cap,
                         backend=ops.effective_backend())

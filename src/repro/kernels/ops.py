@@ -118,21 +118,26 @@ def topr_merge(ids: jnp.ndarray, dists: jnp.ndarray, r: int):
     return topr_merge_pallas(ids, dists, r, interpret=_interpret())
 
 
-def search_expand(x, queries, nbrs, table, valid=None):
-    """Fused beam-search expansion step: (ids, dists, fresh).
+def search_expand(x, queries, nbrs, table, valid=None, vwords=None,
+                  fwords=None):
+    """Fused beam-search expansion step: (ids, dists, fresh[, allowed]).
 
     See ref.search_expand_ref for semantics; the pallas path fuses the
     neighbor-vector gather, query->neighbor distances, the visited-table
     probe, and the optional tombstone-validity probe into one VMEM-resident
     pass (kernels/search_expand.py).  `valid` is the dynamic index's (N,)
     vertex-validity mask (None = all live, the static-index path).  `x`
-    may be a VectorStore (fused dequant on the row DMA).
+    may be a VectorStore (fused dequant on the row DMA).  `vwords`/`fwords`
+    are the optional filtered-search predicate (core/labels.py): packed
+    (N, W) vertex label words + (Q, W) query allowed words; when given,
+    a fourth `allowed` output is appended (route-through semantics).
     """
     xd, xs, xo = _parts(x)
     if get_backend() == "ref":
-        return _ref.search_expand_ref(xd, queries, nbrs, table, valid, xs, xo)
+        return _ref.search_expand_ref(xd, queries, nbrs, table, valid,
+                                      xs, xo, vwords, fwords)
     return search_expand_pallas(xd, queries, nbrs, table, valid, xs, xo,
-                                interpret=_interpret())
+                                vwords, fwords, interpret=_interpret())
 
 
 def rng_propagation_round(x, ids, dists, si, sj):

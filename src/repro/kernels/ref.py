@@ -163,7 +163,9 @@ def search_expand_ref(
     table: jnp.ndarray,
     valid: jnp.ndarray | None = None,
     scale=None, offset=None,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    vwords: jnp.ndarray | None = None,
+    fwords: jnp.ndarray | None = None,
+):
     """One fused beam-search expansion step (see kernels/search_expand.py).
 
     Args:
@@ -182,13 +184,25 @@ def search_expand_ref(
                cannot change any search trajectory.  None = all vertices
                live (the static-index path, bit-identical to the pre-mask
                kernel).
+      vwords/fwords: the optional filtered-search predicate (core/labels.py,
+               DESIGN.md §9): (N, W) packed per-vertex label-bitset words
+               and (Q, W) per-query allowed-bitset words.  Semantics are
+               ROUTE-THROUGH — a filtered-out neighbor keeps its real id,
+               distance, and freshness (it stays fully traversable, per
+               GGNN's connectivity-under-masking observation) and is only
+               flagged in the extra `allowed` output, which the search
+               uses to mask it out of the result heap.  Both or neither
+               must be given.
 
     Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool): the
     neighbor ids (invalid/dead -> -1), exact squared query->neighbor
     distances (+inf where invalid/dead), and the freshness mask — live AND
     not found in the table's probe window.  False positives are impossible
     (exact keys); a capacity miss only re-marks an already-visited id as
-    fresh, which the deduplicating beam merge absorbs.
+    fresh, which the deduplicating beam merge absorbs.  With the filter
+    operands a fourth element `allowed (Q,R) bool` is appended: live AND
+    `any(vwords[id] & fwords[q])` — pure int32 bitwise math, so kernel and
+    oracle agree bitwise on every precision rung.
     """
     q, r = nbrs.shape
     ok = nbrs >= 0
@@ -205,7 +219,12 @@ def search_expand_ref(
     qrows = jnp.arange(q, dtype=jnp.int32)[:, None, None]
     vals = table[qrows, pos]                                  # (Q, R, PL)
     found = jnp.any(vals == nbrs[..., None], axis=-1)
-    return jnp.where(ok, nbrs, -1), d, ok & ~found
+    out = (jnp.where(ok, nbrs, -1), d, ok & ~found)
+    if fwords is None:
+        return out
+    lw = vwords[jnp.clip(nbrs, 0)]                            # (Q, R, W)
+    allowed = ok & jnp.any((lw & fwords[:, None, :]) != 0, axis=-1)
+    return out + (allowed,)
 
 
 def topr_merge_ref(

@@ -26,7 +26,13 @@ This kernel fuses the whole step.  Per query q it
      tombstone mask, core/dynamic.py §DESIGN.md §7): each neighbor's
      validity bit is DMA'd on the same per-row schedule as its vector, and
      a dead neighbor is reported exactly like an empty graph slot
-     (id -1, dist +inf, not fresh).
+     (id -1, dist +inf, not fresh);
+  5. evaluates the optional per-query label predicate (filtered search,
+     core/labels.py, DESIGN.md §9): the neighbor's (W,) packed label-bitset
+     words ride the same per-row DMA schedule, intersect with the query's
+     allowed-bitset block, and emit an extra `allowed` output — ROUTE-
+     THROUGH semantics, so ids/dists/fresh are untouched (the filtered-out
+     neighbor stays traversable; only the result heap masks it).
 
 The (Q·R, D) gathered-vector and repeated-query intermediates never exist:
 HBM traffic per step drops from ~3·(Q·R·D + Q·D·R) read/write/re-read bytes
@@ -63,7 +69,7 @@ from repro.kernels.ref import HASH_PROBES
 
 def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
                           r: int, h: int, probes: int, masked: bool,
-                          quantized: bool):
+                          quantized: bool, filtered: bool):
     """Grid: (Q, R). Step (q, rr) DMAs x[nbrs[q, rr]] (and, in the masked
     variant, the neighbor's validity bit) into scratch row rr; the distance
     + probe evaluation runs once per query on the final row.
@@ -75,17 +81,26 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
     variant carries (1, D) scale/offset operands and dequantizes each
     DMA'd neighbor row as it lands in the fp32 scratch — the same
     elementwise formula as `ref.dequant_rows` (bitwise oracle parity);
-    queries stay fp32.
+    queries stay fp32.  `filtered` (filtered search, DESIGN.md §9) is the
+    same idiom again: the neighbor's (1, W) packed label-bitset words ride
+    the per-row DMA schedule, the query's (1, W) allowed-bitset words are
+    a per-query block, and the intersection test emits the extra `allowed`
+    output — route-through semantics, so ids/dists/fresh are UNCHANGED by
+    the predicate (the neighbor stays traversable either way).
     """
     del nbrs_pref  # consumed by the index_maps
     it = iter(refs)
     vrow_ref = next(it) if masked else None
+    lrow_ref = next(it) if filtered else None
     scale_ref, offset_ref = ((next(it), next(it)) if quantized
                              else (None, None))
-    q_ref, nbrs_ref, tab_ref, ids_ref, d_ref, fresh_ref = (
-        next(it), next(it), next(it), next(it), next(it), next(it))
+    q_ref, nbrs_ref, tab_ref = next(it), next(it), next(it)
+    fw_ref = next(it) if filtered else None
+    ids_ref, d_ref, fresh_ref = next(it), next(it), next(it)
+    alw_ref = next(it) if filtered else None
     vecs_ref = next(it)
     live_ref = next(it) if masked else None
+    labw_ref = next(it) if filtered else None
     rr = pl.program_id(1)
     row = xrow_ref[...].astype(jnp.float32)
     if quantized:
@@ -93,6 +108,8 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
     vecs_ref[pl.ds(rr, 1), :] = row
     if masked:
         live_ref[pl.ds(rr, 1), :] = vrow_ref[...]
+    if filtered:
+        labw_ref[pl.ds(rr, 1), :] = lrow_ref[...]
 
     @pl.when(rr == r - 1)
     def _evaluate():
@@ -109,6 +126,7 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
 
         found = []
         alive = []
+        allow = []
         for j in range(r):                            # R is small: unrolled
             v = nbrs[0, j]
             base = jnp.clip(v, 0) % h
@@ -117,6 +135,10 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
             found.append(jnp.any(win == v))
             if masked:
                 alive.append(live_ref[j, 0] != 0)
+            if filtered:
+                # pure int32 bitwise intersection: bitwise-equal to the
+                # oracle's `any(vwords[id] & fwords[q])` on every rung
+                allow.append(jnp.any((labw_ref[j, :] & fw_ref[0, :]) != 0))
         found = jnp.stack(found).reshape(1, r)
 
         # a tombstoned neighbor (valid[v] == 0) is indistinguishable from an
@@ -129,6 +151,9 @@ def _search_expand_kernel(nbrs_pref, xrow_ref, *refs,
         ids_ref[...] = jnp.where(ok, nbrs, -1)
         d_ref[...] = d
         fresh_ref[...] = (ok & ~found).astype(jnp.int32)
+        if filtered:
+            alw_ref[...] = (ok & jnp.stack(allow).reshape(1, r)
+                            ).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -140,6 +165,8 @@ def search_expand_pallas(
     valid: jnp.ndarray | None = None,
     scale: jnp.ndarray | None = None,
     offset: jnp.ndarray | None = None,
+    vwords: jnp.ndarray | None = None,
+    fwords: jnp.ndarray | None = None,
     *,
     interpret: bool = False,
 ):
@@ -159,15 +186,23 @@ def search_expand_pallas(
                the mask probe adds no extra pass.  None = all live.
       scale/offset: optional (D,) per-dim dequant of the stored x rows,
                fused into the row DMA (None = float storage).
+      vwords/fwords: optional filtered-search predicate (core/labels.py):
+               (N, W) packed per-vertex label words + (Q, W) per-query
+               allowed words.  The neighbor's words ride the same per-row
+               DMA schedule as its vector/validity bit; both or neither.
 
     Returns (ids (Q,R) i32, dists (Q,R) f32, fresh (Q,R) bool) — identical
-    to `ref.search_expand_ref`.
+    to `ref.search_expand_ref`; with the filter operands, a fourth element
+    `allowed (Q,R) bool` (route-through: ids/dists/fresh are unchanged).
     """
     qn, r = nbrs.shape
     n, d = x.shape
     h = table.shape[1]
     masked = valid is not None  # trace-time: None is a distinct jit trace
     quantized = scale is not None
+    filtered = fwords is not None
+    assert filtered == (vwords is not None), \
+        "vwords and fwords must be given together"
     nbrs_safe = jnp.clip(nbrs.astype(jnp.int32), 0, n - 1)
     # wrap-extend the table so every (mod H) probe window is contiguous:
     # ext[base + l] == table[(base + l) % H] for base < H, l < PROBES
@@ -192,6 +227,20 @@ def search_expand_pallas(
     mask_scratch = [pltpu.VMEM((r, 1), jnp.int32)] if masked else []
     mask_ops = ((valid.astype(jnp.int32).reshape(n, 1),) if masked else ())
 
+    # the filtered variant: the neighbor's (1, W) label words ride the same
+    # per-row DMA, the query's (1, W) allowed words are a per-query block
+    w = vwords.shape[1] if filtered else 0
+    lab_specs = [pl.BlockSpec((1, w), lambda q, rr, nb_ref:
+                              (nb_ref[q, rr], 0))] if filtered else []
+    lab_scratch = [pltpu.VMEM((r, w), jnp.int32)] if filtered else []
+    lab_ops = ((vwords.astype(jnp.int32),) if filtered else ())
+    fw_specs = [pl.BlockSpec((1, w), lambda q, rr, nb_ref:
+                             (q, 0))] if filtered else []
+    fw_ops = ((fwords.astype(jnp.int32),) if filtered else ())
+    alw_shape = [jax.ShapeDtypeStruct((qn, r), jnp.int32)] if filtered else []
+    alw_specs = [pl.BlockSpec((1, r), lambda q, rr, nb_ref:
+                              (q, 0))] if filtered else []
+
     q_ops, q_specs = (), []
     if quantized:
         q_ops = tuple(
@@ -204,28 +253,34 @@ def search_expand_pallas(
         grid=(qn, r),
         in_specs=[
             pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (nb_ref[q, rr], 0)),
-        ] + mask_specs + q_specs + [
+        ] + mask_specs + lab_specs + q_specs + [
             pl.BlockSpec((1, dp), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, he), lambda q, rr, nb_ref: (q, 0)),
-        ],
+        ] + fw_specs,
         out_specs=[
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
             pl.BlockSpec((1, r), lambda q, rr, nb_ref: (q, 0)),
-        ],
-        scratch_shapes=[pltpu.VMEM((r, dp), jnp.float32)] + mask_scratch,
+        ] + alw_specs,
+        scratch_shapes=([pltpu.VMEM((r, dp), jnp.float32)] + mask_scratch
+                        + lab_scratch),
     )
-    ids, dists, fresh = pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_search_expand_kernel, r=r, h=h,
                           probes=HASH_PROBES, masked=masked,
-                          quantized=quantized),
+                          quantized=quantized, filtered=filtered),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((qn, r), jnp.int32),
             jax.ShapeDtypeStruct((qn, r), jnp.float32),
             jax.ShapeDtypeStruct((qn, r), jnp.int32),
-        ],
+        ] + alw_shape,
         interpret=interpret,
-    )(nbrs_safe, xp, *mask_ops, *q_ops, qp, nbrs.astype(jnp.int32), tab_ext)
+    )(nbrs_safe, xp, *mask_ops, *lab_ops, *q_ops, qp,
+      nbrs.astype(jnp.int32), tab_ext, *fw_ops)
+    if filtered:
+        ids, dists, fresh, allowed = out
+        return ids, dists, fresh.astype(bool), allowed.astype(bool)
+    ids, dists, fresh = out
     return ids, dists, fresh.astype(bool)

@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve --index /tmp/sift.idx.npz \
         [--batches 8] [--ef 48] [--backend pallas] [--visited hashed] \
         [--visited-cap 512] [--shards 4] [--precision int8] \
-        [--mutable --churn 64]
+        [--mutable --churn 64] [--filter-labels 100 --selectivity 0.1]
 
 `--backend` selects the kernel path of the fused expansion step
 (`kernels/search_expand.py`; off-TPU "pallas" degrades to interpret mode).
@@ -20,6 +20,17 @@ bytes/vector the bandwidth-bound expansion kernel reads.  At int8 the
 final ef candidates are re-ranked against the fp32 tier (exact
 distances) unless `--no-rescore` is given; the printed `bpv=` column is
 the traversal-tier bytes/vector.
+
+`--filter-labels L` turns on FILTERED serving (DESIGN.md §9): every vertex
+gets a synthetic label uniform in [0, L) (deterministic seed), and each
+query carries a random allowed-label predicate of ~`--selectivity`·L
+labels.  The search routes through filtered-out vertices but returns only
+predicate-passing ids (a hard invariant, printed as `pred_ok=`; recall is
+scored against brute force over each query's ALLOWED subset).  `ef` is
+automatically raised to the over-fetch floor ~4·k/selectivity (§9.3) —
+the printed `ef=` field shows the effective value.  Composes with
+`--shards` (predicates shard with the queries) and `--mutable` (labels
+ride through insert/delete/compact).
 
 `--mutable` wraps the loaded index in a `core.dynamic.DynamicIndex` and
 interleaves mutation requests with the query batches: every batch first
@@ -40,10 +51,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import brute_force_knn, recall_at_k, vecstore
+from repro.core import labels as lab
 from repro.core.distributed import distributed_search
 from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.pools import Pool
-from repro.core.search import medoid, search
+from repro.core.search import medoid, overfetch_ef, search
 from repro.data import synthetic
 from repro.kernels import ops
 
@@ -86,6 +98,13 @@ def main():
     ap.add_argument("--refine-rounds", type=int, default=None,
                     help="localized propagation rounds per insert batch "
                          "(only with --mutable; default 2)")
+    ap.add_argument("--filter-labels", type=int, default=0,
+                    help="filtered serving: synthetic per-vertex labels in "
+                         "[0, L); each query gets a random allowed-label "
+                         "predicate (0 = unfiltered)")
+    ap.add_argument("--selectivity", type=float, default=None,
+                    help="fraction of the label space each query predicate "
+                         "allows (only with --filter-labels; default 0.1)")
     args = ap.parse_args()
 
     if args.visited_cap is not None and args.visited != "hashed":
@@ -104,6 +123,11 @@ def main():
     if args.no_rescore and args.precision == "fp32":
         ap.error("--no-rescore only applies with --precision bf16/int8 "
                  "(fp32 traversal is already exact)")
+    if args.selectivity is not None and not args.filter_labels:
+        ap.error("--selectivity only applies with --filter-labels")
+    if args.filter_labels and not (args.selectivity is None
+                                   or 0 < args.selectivity <= 1):
+        ap.error("--selectivity must be in (0, 1]")
 
     if args.backend is not None:
         ops.set_backend(args.backend)
@@ -124,6 +148,8 @@ def main():
     bpv = store.bytes_per_vector()
     entry = medoid(xt)
 
+    lstore, sel, ef = _filter_setup(args, x.shape[0])
+
     mesh = None
     if args.shards > 0:
         mesh = jax.make_mesh((args.shards,), ("data",),
@@ -138,34 +164,69 @@ def main():
         if rescore is not None:
             rescore = jax.device_put(rescore, rep)
 
-    def run_batch(q):
-        kw = dict(k=args.k, ef=args.ef, entry=entry, visited=args.visited,
+    def run_batch(q, fwords):
+        kw = dict(k=args.k, ef=ef, entry=entry, visited=args.visited,
                   visited_cap=args.visited_cap, rescore=rescore)
+        if lstore is not None:
+            kw.update(labels=lstore.words, filter=fwords)
         if mesh is None:
             return search(xt, ids, q, **kw)
         return distributed_search(mesh, ("data",), xt, ids, q, **kw)
 
-    lat, recs = [], []
+    lat, recs, preds = [], [], []
     for b in range(args.batches + 1):
-        q = synthetic.queries_from(jax.random.PRNGKey(100 + b), x,
-                                   args.batch_size)
+        kb = jax.random.PRNGKey(100 + b)
+        q = synthetic.queries_from(kb, x, args.batch_size)
+        fw = (lab.random_query_filters(jax.random.fold_in(kb, 7),
+                                       args.batch_size, args.filter_labels,
+                                       sel)
+              if lstore is not None else None)
         t0 = time.perf_counter()
-        res = run_batch(q)
+        res = run_batch(q, fw)
         res.ids.block_until_ready()
         dt = time.perf_counter() - t0
         if b == 0:
             continue  # compile batch
         lat.append(dt)
-        gt = brute_force_knn(x, q, args.k)
-        recs.append(recall_at_k(res.ids, gt))
+        if lstore is None:
+            gt = brute_force_knn(x, q, args.k)
+            recs.append(recall_at_k(res.ids, gt))
+        else:
+            # recall against brute force over each query's ALLOWED subset,
+            # plus the hard invariant: every returned id passes its predicate
+            gt = lab.filtered_brute_force(x, q, fw, lstore.words, args.k)
+            recs.append(lab.filtered_recall_at_k(res.ids, gt))
+            preds.append(lab.predicate_fraction(res.ids, fw, lstore.words))
 
     qps = args.batch_size / (sum(lat) / len(lat))
+    extra = ""
+    if lstore is not None:
+        extra = (f"filtered=1  selectivity={sel:g}  "
+                 f"pred_ok={sum(preds)/len(preds):.3f}  ef={ef}  ")
     print(f"qps={qps:.0f}  p50={sorted(lat)[len(lat)//2]*1e3:.1f}ms  "
-          f"recall@{args.k}={sum(recs)/len(recs):.3f}  "
+          f"recall@{args.k}={sum(recs)/len(recs):.3f}  {extra}"
           f"backend={ops.effective_backend()}  visited={args.visited}  "
           f"precision={args.precision}  bpv={bpv:.0f}  "
           f"rescore={int(rescore is not None)}  "
           f"shards={max(args.shards, 1)}")
+
+
+def _filter_setup(args, n: int):
+    """(LabelStore | None, selectivity, effective ef) for filtered serving.
+
+    Labels are synthetic and deterministic (the saved index carries no
+    attributes); the effective ef applies the §9.3 over-fetch policy
+    (`core.search.overfetch_ef` — the same single source fig12
+    benchmarks and validates) so ~k allowed survivors exist even at low
+    selectivity.
+    """
+    if not args.filter_labels:
+        return None, None, args.ef
+    vlab = jax.random.randint(jax.random.PRNGKey(1234), (n,), 0,
+                              args.filter_labels)
+    lstore = lab.encode_labels(vlab, args.filter_labels)
+    sel = args.selectivity if args.selectivity is not None else 0.1
+    return lstore, sel, overfetch_ef(n, args.k, sel, ef=args.ef)
 
 
 def serve_mutable(args, x, dists, ids):
@@ -179,38 +240,68 @@ def serve_mutable(args, x, dists, ids):
     mutation-throughput numbers.
     """
     rounds = args.refine_rounds if args.refine_rounds is not None else 2
+    lstore, sel, ef = _filter_setup(args, x.shape[0])
+    nl = args.filter_labels
     idx = DynamicIndex(x, Pool(ids, dists),
                        DynamicConfig(refine_rounds=rounds,
-                                     precision=args.precision))
+                                     precision=args.precision),
+                       vertex_labels=(None if lstore is None
+                                      else lstore.labels),
+                       n_labels=nl if lstore is not None else None)
     churn = args.churn if args.churn is not None else 64
-    mut_lat, lat, recs = [], [], []
+    mut_lat, lat, recs, preds = [], [], [], []
     for b in range(args.batches + 1):
         kb = jax.random.PRNGKey(100 + b)
         t0 = time.perf_counter()
         if churn > 0:
-            idx.insert(synthetic.queries_from(kb, x, churn, noise=0.1))
+            idx.insert(synthetic.queries_from(kb, x, churn, noise=0.1),
+                       vertex_labels=(None if lstore is None else np.asarray(
+                           jax.random.randint(jax.random.fold_in(kb, 3),
+                                              (churn,), 0, nl), np.int32)))
             live = idx.labels[:idx.size][np.asarray(idx.valid[:idx.size])]
             idx.delete(live[:churn])  # oldest live: a sliding-window corpus
         t_mut = time.perf_counter() - t0
 
         q = synthetic.queries_from(jax.random.fold_in(kb, 1), x,
                                    args.batch_size)
+        fw = (lab.random_query_filters(jax.random.fold_in(kb, 7),
+                                       args.batch_size, nl, sel)
+              if lstore is not None else None)
         t0 = time.perf_counter()
-        res = idx.search(q, k=args.k, ef=args.ef, visited=args.visited,
+        res = idx.search(q, k=args.k, ef=ef, visited=args.visited,
                          visited_cap=args.visited_cap,
-                         rescore=False if args.no_rescore else None)
+                         rescore=False if args.no_rescore else None,
+                         filter=fw)
         res.dists.block_until_ready()
         dt = time.perf_counter() - t0
         if b == 0:
             continue  # compile batch
         mut_lat.append(t_mut)
         lat.append(dt)
-        recs.append(recall_at_k(res.ids, idx.exact_knn(q, args.k)))
+        gt = idx.exact_knn(q, args.k, filter=fw)
+        if lstore is None:
+            recs.append(recall_at_k(res.ids, gt))
+        else:
+            recs.append(lab.filtered_recall_at_k(res.ids, gt))
+            # the hard invariant, mapped back from label space: every
+            # returned external label's slot must pass its predicate
+            # (the canonical check, lab.predicate_fraction, runs on slots)
+            r_ids = np.asarray(res.ids)
+            slots = np.clip(np.searchsorted(idx.labels[:idx.size],
+                                            np.clip(r_ids, 0, None)),
+                            0, idx.size - 1)
+            slots = np.where(r_ids >= 0, slots, -1)
+            preds.append(lab.predicate_fraction(jnp.asarray(slots), fw,
+                                                idx.label_words()))
 
     qps = args.batch_size / (sum(lat) / len(lat))
     mut_per_s = 2 * churn / (sum(mut_lat) / len(mut_lat)) if churn else 0.0
+    extra = ""
+    if lstore is not None:
+        extra = (f"filtered=1  selectivity={sel:g}  "
+                 f"pred_ok={sum(preds)/len(preds):.3f}  ef={ef}  ")
     print(f"qps={qps:.0f}  p50={sorted(lat)[len(lat)//2]*1e3:.1f}ms  "
-          f"recall@{args.k}={sum(recs)/len(recs):.3f}  "
+          f"recall@{args.k}={sum(recs)/len(recs):.3f}  {extra}"
           f"mutations/s={mut_per_s:.0f}  churn={churn}  "
           f"live={idx.n_live}  tomb={idx.tombstone_fraction:.2f}  "
           f"rounds={idx.rounds_run}  "

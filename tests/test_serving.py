@@ -1,10 +1,18 @@
-"""Serving engine + kNN-LM retrieval integration tests."""
+"""Serving engine + kNN-LM retrieval integration tests, plus the ANN
+launch-CLI end-to-end smoke: build_index -> serve over a real subprocess
+boundary (the artifact format, the CLI flags, and the printed metrics are
+all part of the served contract)."""
+import os
+import re
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# Engine decode loops (~13 s) — nightly tier.
+# Engine decode loops + CLI subprocesses (~13 s + ~20 s) — nightly tier.
 pytestmark = pytest.mark.slow
 
 from repro.configs import get_arch, reduced
@@ -51,6 +59,70 @@ class TestServeEngine:
         assert out["tokens"].shape == (1, 4)
         assert bool(jnp.all(out["tokens"] >= 0))
         assert bool(jnp.all(out["tokens"] < cfg.vocab))
+
+
+class TestServeCLI:
+    """build_index.py -> serve.py --filter-labels over subprocesses: the
+    ISSUE 5 end-to-end smoke.  Asserts the filtered-serving hard invariant
+    (pred_ok == 1.0: every returned id satisfies its predicate) and that
+    the reported recall field parses — against the tiny `sift-demo`
+    dataset config (seconds-scale CPU build)."""
+
+    @pytest.fixture(scope="class")
+    def demo_index(self, tmp_path_factory):
+        out = str(tmp_path_factory.mktemp("idx") / "demo.idx.npz")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.build_index",
+             "--dataset", "sift-demo", "--out", out],
+            env=env, capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        assert os.path.exists(out)
+        return out, env
+
+    def _serve(self, demo_index, *extra):
+        out, env = demo_index
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--index", out,
+             "--batches", "2", "--batch-size", "48", "--ef", "32",
+             "--backend", "ref", "--filter-labels", "20",
+             "--selectivity", "0.2", *extra],
+            env=env, capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        line = [ln for ln in proc.stdout.splitlines() if "qps=" in ln][-1]
+        return line
+
+    def test_filtered_serve_end_to_end(self, demo_index):
+        line = self._serve(demo_index)
+        assert "filtered=1" in line and "selectivity=0.2" in line
+        # the hard invariant: 100% of returned ids satisfy their predicate
+        pred = re.search(r"pred_ok=([\d.]+)", line)
+        assert pred and float(pred.group(1)) == 1.0, line
+        # the reported (filtered) recall field parses and is sane
+        rec = re.search(r"recall@10=([\d.]+)", line)
+        assert rec is not None, line
+        assert 0.0 <= float(rec.group(1)) <= 1.0
+        assert float(rec.group(1)) >= 0.9, line  # allowed-subset recall
+
+    def test_filtered_serve_mutable_end_to_end(self, demo_index):
+        """Labels ride the churn path: insert/delete under a predicate."""
+        line = self._serve(demo_index, "--mutable", "--churn", "16")
+        assert "filtered=1" in line and "mutable=1" in line
+        pred = re.search(r"pred_ok=([\d.]+)", line)
+        assert pred and float(pred.group(1)) == 1.0, line
+        rec = re.search(r"recall@10=([\d.]+)", line)
+        assert rec and 0.0 <= float(rec.group(1)) <= 1.0, line
+
+    def test_selectivity_without_filter_is_rejected(self, demo_index):
+        out, env = demo_index
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--index", out,
+             "--selectivity", "0.2"],
+            env=env, capture_output=True, text=True, timeout=120)
+        assert proc.returncode != 0
+        assert "--selectivity" in proc.stderr
 
 
 class TestKnnLM:
