@@ -91,17 +91,20 @@ def eval_recall(x, graph_ids, q, gt, ef: int = EF):
 def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3,
                  backend: str | None = None, visited: str = "dense",
                  visited_cap: int | None = None, rescore=None,
-                 labels=None, filter=None):
+                 labels=None, filter=None, entry=None, ids_map=None):
     """Compile-excluded search wall time -> (result, QPS).
 
     `backend`/`visited`/`visited_cap` select the query-path configuration
     (kernels/search_expand.py + hashed visited set); defaults reproduce the
     ambient-backend dense-bitmask search.  `x` may be a VectorStore and
     `rescore` the fp32 tier (the precision ladder, DESIGN.md §8);
-    `labels`/`filter` the filtered-search predicate (DESIGN.md §9).
+    `labels`/`filter` the filtered-search predicate (DESIGN.md §9);
+    `entry`/`ids_map` the optimized layout's mapped entry point and
+    inverse permutation (core/layout.py, DESIGN.md §10).
     """
     kw = dict(k=K, ef=ef, visited=visited, visited_cap=visited_cap,
-              rescore=rescore, labels=labels, filter=filter)
+              rescore=rescore, labels=labels, filter=filter,
+              entry=entry, ids_map=ids_map)
     with backend_scope(backend):
         res = search(x, graph_ids, q, **kw)        # compile + warm
         res.ids.block_until_ready()
@@ -116,17 +119,23 @@ def timed_search(x, graph_ids, q, ef: int = EF, repeats: int = 3,
 
 
 def row(name: str, seconds: float, derived: str, *,
-        precision: str = "fp32", bytes_per_vector: float = 0.0) -> str:
+        precision: str = "fp32", bytes_per_vector: float = 0.0,
+        opt_layout: str | None = None) -> str:
     """One harness CSV row.
 
     Every row carries the traversal-tier `precision=` and `bpv=` (bytes
     per stored vector; 0.0 where no vector storage is involved, e.g.
     analytic cells) so the perf trajectory can distinguish dtype
     regressions from algorithmic ones — benchmarks/run.py validates both
-    fields on the smoke artifact (SMOKE_SCHEMA 2).
+    fields on the smoke artifact (SMOKE_SCHEMA 2).  `opt_layout` is the
+    graph-layout tag (SMOKE_SCHEMA 4, core/layout.py): "none" for the raw
+    pool layout, or the ordering (+ pruned degree) of an optimized index —
+    required on every fig6 row so the QPS trajectory never silently mixes
+    layouts.
     """
+    opt = "" if opt_layout is None else f" opt_layout={opt_layout}"
     return (f"{name},{seconds * 1e6:.1f},{derived}"
-            f" precision={precision} bpv={bytes_per_vector:.1f}")
+            f" precision={precision} bpv={bytes_per_vector:.1f}{opt}")
 
 
 def fp32_bpv(x) -> float:

@@ -177,8 +177,64 @@ def grnnd_round_rows() -> list[str]:
     return out
 
 
+def grnnd_expand_layout_model(d: int, *, q: int = 1024, r: int = 32,
+                              degree: int = 24, locality: float = 0.35,
+                              bytes_per_dim: float = 4.0,
+                              trans: int = 512) -> dict:
+    """Analytic DMA model of ONE search-expansion step, raw vs optimized
+    layout (core/layout.py, DESIGN.md §10).
+
+    Per query the fused kernel (kernels/search_expand.py) DMAs the
+    selected vertex's neighbor rows: R row reads of d·bytes_per_dim bytes
+    each, at effectively random row addresses — every read pays the full
+    HBM transaction granularity `trans` (~a 512 B burst).  The optimized
+    layout cuts this two ways:
+
+      * packing: only `degree` (the packed D ≤ R) rows exist per vertex —
+        sentinel tail slots re-read row 0's page, which is free;
+      * renumbering: a `locality` fraction of neighbor rows land adjacent
+        to rows fetched by the same step (BFS levels are contiguous), so
+        their bursts coalesce and pay row bytes instead of a full
+        transaction.
+
+    `locality` = 0.35 is the measured EXPERIMENTS.md §L1 figure for
+    BFS-from-medoid at reproduction scale; the model is deliberately
+    first-order (no cache reuse across queries) — it bounds the win the
+    fig6 wall-clock rows then measure end to end.
+    """
+    row_bytes = d * bytes_per_dim
+    per_read_raw = max(row_bytes, trans)
+    base_bytes = q * r * per_read_raw
+    opt_bytes = q * degree * (locality * row_bytes
+                              + (1.0 - locality) * per_read_raw)
+    return {
+        "t_mem_base_s": base_bytes / HBM_BW,
+        "t_mem_opt_s": opt_bytes / HBM_BW,
+        "dma_cut": base_bytes / opt_bytes,
+    }
+
+
+def grnnd_expand_layout_rows() -> list[str]:
+    """The layout pass's roofline entry: step-time bound before/after the
+    packed + renumbered adjacency, per corpus shape (ISSUE 6)."""
+    out = []
+    for shape, d in (("search_1m_d128", 128), ("search_1m_d960", 960)):
+        m = grnnd_expand_layout_model(d)
+        derived = (f"dom=memory"
+                   f" mem_base={m['t_mem_base_s']*1e6:.1f}us"
+                   f" mem_opt={m['t_mem_opt_s']*1e6:.1f}us"
+                   f" dma_cut={m['dma_cut']:.2f}x"
+                   f" degree=24of32 locality=0.35")
+        out.append(
+            f"roofline/grnnd-expand-layout/{shape},"
+            f"{m['t_mem_opt_s']*1e6:.1f},{derived}"
+            f" precision=fp32 bpv={4.0 * d:.1f} opt_layout=bfs-d24")
+    return out
+
+
 def run() -> list[str]:
     out = grnnd_round_rows()
+    out += grnnd_expand_layout_rows()
     for r in analyze():
         name = f"roofline/{r['arch']}/{r['shape']}"
         # LLM dry-run cells have no ANN vector storage: precision/bpv are

@@ -35,13 +35,18 @@ ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
 # as a float in [0, 1] wherever present, required on every fig12 row —
 # so the trajectory can slice the filtered cost curve per selectivity
 # (ISSUE 5)
-SMOKE_SCHEMA = 3
+# schema 4: graph-layout rows carry `opt_layout=` (core/layout.py): "none"
+# for the raw pool layout or the ordering(+pruned-degree) tag of an
+# optimized index — required on every fig6 row, and the fig6 validator
+# gates QPS(optimized) >= QPS(baseline) per (dataset, ef) (ISSUE 6)
+SMOKE_SCHEMA = 4
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
 _PRECISIONS = ("fp32", "bf16", "int8")
 _PREC_RE = re.compile(r"(?:^|\s)precision=(\S+)")
 _BPV_RE = re.compile(r"(?:^|\s)bpv=(\S+)")
 _SEL_RE = re.compile(r"(?:^|\s)selectivity=(\S+)")
+_OPT_RE = re.compile(r"(?:^|\s)opt_layout=([\w.-]+)")
 # families the smoke artifact must always cover (one per serving surface)
 SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "roofline")
 
@@ -81,6 +86,10 @@ def parse_row(row: str) -> dict:
     Schema 3: an optional `selectivity=<float>` (filtered-search rows) is
     lifted as well; where present it must parse as a float in [0, 1].
     The fig12 validator additionally REQUIRES it on every fig12 row.
+
+    Schema 4: an optional `opt_layout=<tag>` (graph-layout rows,
+    core/layout.py) is lifted; the fig6 validator REQUIRES it on every
+    fig6 row and gates QPS(optimized) >= QPS(baseline).
     """
     parts = row.split(",", 2)
     if len(parts) != 3:
@@ -104,9 +113,11 @@ def parse_row(row: str) -> dict:
         sel_val = float(sel.group(1))
         if not 0.0 <= sel_val <= 1.0:
             raise ValueError(f"selectivity outside [0, 1]: {row!r}")
+    opt = _OPT_RE.search(derived)
     return {"name": name, "us_per_call": float(us), "derived": derived,
             "precision": prec.group(1), "bytes_per_vector": bpv_val,
-            "selectivity": sel_val}
+            "selectivity": sel_val,
+            "opt_layout": opt.group(1) if opt else None}
 
 
 def validate_rows(parsed: list[dict]) -> None:
@@ -120,8 +131,10 @@ def validate_rows(parsed: list[dict]) -> None:
     errors = [p["name"] for p in parsed if "/ERROR" in p["name"]]
     if errors:
         raise ValueError(f"benchmark families crashed: {errors}")
+    from benchmarks.fig6_qps import validate_layout_rows
     from benchmarks.fig11_precision import validate_precision_rows
     from benchmarks.fig12_filtered import validate_filtered_rows
+    validate_layout_rows(parsed)
     validate_precision_rows(parsed)
     validate_filtered_rows(parsed)
 
@@ -131,7 +144,8 @@ def run_smoke(out_path: str) -> None:
     rows: list[str] = []
     calls = (
         ("fig5", lambda m: m.run(n_seq=SMOKE_N, backend="interpret")),
-        ("fig6", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig6", lambda m: m.run(n=SMOKE_N, backend="interpret",
+                                 optimize_layout=True)),
         ("fig10", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig11", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig12", lambda m: m.run(n=SMOKE_N, backend="interpret")),

@@ -15,6 +15,9 @@ from repro.core.vecstore import (
 from repro.core.labels import (
     LabelStore, encode_labels, encode_label_sets, filtered_brute_force,
     filtered_recall_at_k)
+from repro.core.layout import (
+    OptimizedIndex, optimize, pack_adjacency, unpack_adjacency,
+    packed_degree, order_permutation, prune_adjacency)
 
 __all__ = [
     "GRNNDConfig", "build_graph", "build_graph_with_stats", "update_round",
@@ -27,4 +30,6 @@ __all__ = [
     "PRECISIONS", "VectorStore", "encode", "quantize_int8",
     "LabelStore", "encode_labels", "encode_label_sets",
     "filtered_brute_force", "filtered_recall_at_k",
+    "OptimizedIndex", "optimize", "pack_adjacency", "unpack_adjacency",
+    "packed_degree", "order_permutation", "prune_adjacency",
 ]

@@ -208,7 +208,7 @@ def sharded_build_graph(
 def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                        max_steps: int, visited: str, visited_cap: int | None,
                        has_valid: bool, quantized: bool, has_rescore: bool,
-                       has_filter: bool, backend: str):
+                       has_filter: bool, has_map: bool, backend: str):
     """One jitted shard_map per (mesh, axes, search-config) — cached so
     repeated serving batches reuse the compiled executable instead of
     re-tracing per call.  `has_valid` selects the tombstone-masked variant
@@ -222,7 +222,11 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
     label words replicate like x, while the (Q, W) per-query allowed words
     shard WITH the queries — and the flag lives in this cache key, so a
     filtered batch can never reuse an unfiltered executable (or vice
-    versa).  `backend` is unused in the body but part of the cache key:
+    versa).  `has_map` selects the optimized-layout variant (core/
+    layout.py): the (N,) inverse permutation replicates like the graph
+    and each shard applies it to its own result slice — a per-row gather,
+    so shard invariance is untouched.  `backend` is unused in the body
+    but part of the cache key:
     the inner search dispatches kernels at trace time (same contract as
     search._search_impl)."""
     del backend
@@ -235,14 +239,15 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                 else x_r)
         rescore = next(it) if has_rescore else None
         valid = next(it) if has_valid else None
+        ids_map = next(it) if has_map else None
         vwords = next(it) if has_filter else None
         fwords = next(it) if has_filter else None
         return search(x_in, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
                       entry=entry_r, visited=visited, visited_cap=visited_cap,
                       valid=valid, rescore=rescore,
-                      labels=vwords, filter=fwords)
+                      labels=vwords, filter=fwords, ids_map=ids_map)
 
-    n_extra = 2 * quantized + has_rescore + has_valid
+    n_extra = 2 * quantized + has_rescore + has_valid + has_map
     in_specs = ((rspec, rspec, qspec, rspec) + (rspec,) * n_extra
                 + ((rspec, qspec) if has_filter else ()))
     return jax.jit(shard_map(
@@ -270,6 +275,7 @@ def distributed_search(
     rescore=None,
     labels=None,
     filter=None,
+    ids_map: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Query-sharded beam search over the mesh.
 
@@ -297,6 +303,10 @@ def distributed_search(
     with the queries.  Filtering stays embarrassingly parallel — the
     route-through beam and result heap are per-query state — so shard
     invariance holds bitwise exactly as in the unfiltered path.
+
+    `ids_map` is the optimized-layout inverse permutation (core/layout.py,
+    `OptimizedIndex.inv`), replicated like the graph; each shard maps its
+    own returned ids back to original numbering.
     """
     axes = tuple(axes)
     n_shards = 1
@@ -328,7 +338,7 @@ def distributed_search(
     sharded = _sharded_search_fn(mesh, axes, k, ef, max_steps, visited,
                                  visited_cap, valid is not None,
                                  quantized, rescore is not None,
-                                 filter is not None,
+                                 filter is not None, ids_map is not None,
                                  ops.effective_backend())
     rep = NamedSharding(mesh, PSpec())
     xd = jax.device_put(xd, rep)
@@ -342,6 +352,8 @@ def distributed_search(
         extra += (jax.device_put(rescore, rep),)
     if valid is not None:
         extra += (jax.device_put(valid, rep),)
+    if ids_map is not None:
+        extra += (jax.device_put(ids_map, rep),)
     if filter is not None:
         extra += (jax.device_put(vwords, rep),
                   jax.device_put(fwords, qsharding))

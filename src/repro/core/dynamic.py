@@ -27,9 +27,11 @@ keeps it searchable under mutation (DESIGN.md §7):
 
 External identity is a monotone int64 **label** (returned by `insert`,
 accepted by `delete`, reported by `search`): internal slot ids move on
-compaction, labels never do.  `labels[:size]` is strictly increasing by
-construction (initial arange, appends increase, compaction keeps order),
-which makes label -> slot lookup a binary search.
+compaction — and, with `DynamicConfig(layout=...)`, on the locality
+renumbering passes (core/layout.py, DESIGN.md §10) — labels never do.
+Label -> slot lookup is a binary search through an argsort of
+`labels[:size]` (without a layout permutation the table is strictly
+increasing and the argsort is the identity).
 
 The vertex-sharded distributed variant routes insertion requests to the
 owning shard with the same all-gather + local-filter exchange as the build
@@ -51,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import labels as L
+from repro.core import layout as LY
 from repro.core import pools as P
 from repro.core import vecstore as VS
 from repro.core.grnnd import GRNNDConfig, _pair_requests_chunk
@@ -68,6 +71,10 @@ class DynamicConfig(NamedTuple):
     compact_threshold: float = 0.25   # tombstone fraction that triggers compact()
     min_capacity: int = 64            # smallest padded buffer
     precision: str = "fp32"           # traversal-tier storage (DESIGN.md §8)
+    layout: str | None = None         # locality renumbering ("bfs"/"hub",
+                                      # core/layout.py §DESIGN.md §10): slots
+                                      # are permuted at construction and
+                                      # re-optimized after every compact()
 
 
 def _pow2_capacity(need: int, floor: int) -> int:
@@ -179,6 +186,7 @@ class DynamicIndex:
         n, d = x.shape
         assert pool.ids.shape[0] == n
         assert cfg.precision in VS.PRECISIONS, cfg.precision
+        assert cfg.layout is None or cfg.layout in LY.ORDERS, cfg.layout
         self.cfg = cfg
         self.r = pool.r
         self.size = n
@@ -231,6 +239,8 @@ class DynamicIndex:
             self.vlabels = np.full((cap,), -1, np.int32)
             self.vlabels[:n] = vl
         self._vwords: jnp.ndarray | None = None  # packed cache (lazy)
+        if cfg.layout is not None:
+            self.optimize_layout(cfg.layout)
 
     # -- bookkeeping ------------------------------------------------------
 
@@ -282,6 +292,63 @@ class DynamicIndex:
             self.vlabels = np.concatenate(
                 [self.vlabels, np.full((grow,), -1, np.int32)])
             self._vwords = None
+
+    # -- layout optimization (core/layout.py, DESIGN.md §10) --------------
+
+    def optimize_layout(self, order: str | None = None) -> None:
+        """Renumber slots for access locality (BFS-from-medoid or
+        hub-first, `core.layout.order_permutation`).
+
+        A pure internal relabeling: external labels, search results (label
+        space, float-exact), and every later mutation are unaffected — the
+        permutation is applied consistently to vectors, both precision
+        tiers, pools (rows AND the ids inside them), the validity mask,
+        and both label tables, and the cached entry vertex is remapped
+        rather than recomputed.  Pools keep their width R (mutations need
+        the slack), so only the renumbering — not the degree packing — of
+        the static `optimize()` pass applies here; inserts land at the
+        buffer tail and erode locality until `compact()` re-runs this.
+        """
+        order = order if order is not None else (self.cfg.layout or "bfs")
+        assert order in LY.ORDERS, order
+        self.cfg = self.cfg._replace(layout=order)
+        size = self.size
+        if size <= 1 or self.n_live == 0:
+            return
+        e = int(self.entry())  # pre-permutation medoid (layout contract)
+        perm = LY.order_permutation(
+            np.asarray(self.pool.ids[:size]), order, entry=e,
+            valid=np.asarray(self.valid[:size]))
+        self._apply_slot_permutation(perm)
+
+    def _apply_slot_permutation(self, perm: np.ndarray) -> None:
+        """Apply `perm[old_slot] = new_slot` over the allocated prefix
+        (pad rows past `size` stay put)."""
+        size, cap = self.size, self.capacity
+        inv = np.argsort(perm)                              # inv[new] = old
+        inv_full = np.concatenate(
+            [inv, np.arange(size, cap)]).astype(np.int32)
+        perm_full = np.concatenate(
+            [perm, np.arange(size, cap)]).astype(np.int32)
+        inv_d = jnp.asarray(inv_full)
+        perm_d = jnp.asarray(perm_full)
+
+        self.x = self.x[inv_d]
+        if self.store is not None:
+            # frozen scale/offset ⇒ a pure row gather, stored bytes exact
+            self.store = self.store._replace(data=self.store.data[inv_d])
+        mapped = jnp.where(self.pool.ids >= 0,
+                           perm_d[jnp.clip(self.pool.ids, 0)], -1)
+        self.pool = P.Pool(ids=mapped[inv_d], dists=self.pool.dists[inv_d])
+        self.valid = self.valid[inv_d]
+        self.labels = self.labels[inv_full]
+        if self.vlabels is not None:
+            self.vlabels = self.vlabels[inv_full]
+            self._vwords = None
+        if self._entry is not None:
+            e = int(self._entry)
+            self._entry = (jnp.int32(int(perm[e])) if 0 <= e < size
+                           else self._entry)
 
     # -- mutation ---------------------------------------------------------
 
@@ -394,11 +461,15 @@ class DynamicIndex:
         if self.size == 0:
             return 0  # fully-compacted-away index: everything is a no-op
         table = self.labels[:self.size]
-        slots = np.searchsorted(table, lab)
+        # under a layout permutation (optimize_layout) the table is no
+        # longer slot-ordered; binary-search through its argsort (the
+        # identity when no permutation ever ran)
+        sorter = np.argsort(table, kind="stable")
+        pos = np.searchsorted(table, lab, sorter=sorter)
         # issued labels absent from the table were compacted away: no-op
-        present = ((slots < self.size)
-                   & (table[np.minimum(slots, self.size - 1)] == lab))
-        slots = np.unique(slots[present])
+        present = ((pos < self.size)
+                   & (table[sorter[np.minimum(pos, self.size - 1)]] == lab))
+        slots = np.unique(sorter[pos[present]])
         alive = np.asarray(self.valid)[slots]
         slots = slots[alive]
         if slots.size:
@@ -468,6 +539,13 @@ class DynamicIndex:
                            if 0 <= e < size and new_of_old[e] >= 0 else None)
         self.size = n_new
         self.n_live = n_new
+        if self.cfg.layout is not None:
+            # re-establish locality over the compacted rows (DESIGN.md
+            # §10).  Also exact: the renumbering pass preserves label-space
+            # results bit-for-bit (the cached entry is remapped, never
+            # recomputed), so compact()'s exactness guarantee survives the
+            # extra permutation (tests/test_dynamic.py).
+            self.optimize_layout(self.cfg.layout)
 
     # -- queries ----------------------------------------------------------
 

@@ -1,0 +1,352 @@
+"""Post-build graph layout optimization (DESIGN.md §10).
+
+GRNND emits neighbor pools in whatever (N, R) shape and row order
+propagation converged them; the fused `search_expand` kernel DMAs those
+rows as-is.  CAGRA (PAPERS.md) showed that on exactly this kernel shape,
+three index-representation changes buy large constant factors without
+touching the search algorithm:
+
+  1. **Degree-fixed packed adjacency** — pools are compacted to a single
+     out-degree D: interior -1 holes are squeezed out (stable, so the
+     distance-rank edge order of `topr_merge` rows is preserved), rows are
+     padded with the -1 sentinel to exactly D, and trailing all-sentinel
+     columns beyond the true max degree are dropped.  The kernel's row-DMA
+     schedule is unchanged — it already reads fixed-width rows and skips
+     sentinels — it just reads D·4 instead of R·4 bytes of ids and gathers
+     ≤ D instead of ≤ R vectors per expansion.
+  2. **Vertex renumbering for locality** — a permutation places vertices
+     that the beam search touches together (graph-BFS levels from the
+     medoid entry, or hubs-first by in-degree) at adjacent row indices, so
+     neighbor-row gathers hit fewer distinct pages/cache lines.
+  3. **Detour-count edge pruning** (optional, `prune=True`) — drop the
+     edges CAGRA's §4.2 rank heuristic marks as redundant (an edge v→u is
+     detourable when some kept edge v→w has d(v,w) < d(v,u) and
+     d(w,u) < d(v,u)); keeps recall at a fraction of the degree.
+
+The permutation contract (what makes (2) safe to ship):
+
+  * `perm[old] = new` maps original vertex ids to optimized row indices;
+    `inv = argsort(perm)` maps back.  All index-side state is remapped
+    together — VectorStore rows, adjacency rows AND the ids inside them,
+    tombstone `valid` masks, rescore tiers, LabelStore words, external
+    label tables — and `inv` is handed to the search as `ids_map`, a final
+    on-device gather that converts returned ids back to ORIGINAL numbering.
+    External callers see identical ids before and after `optimize()`.
+  * The entry point is computed on the ORIGINAL arrays and then mapped
+    through `perm`.  (Recomputing the medoid after permutation could pick
+    a different argmin: fp reductions are not order-invariant.)
+  * Renumbering + packing alone is **bitwise-exact**: distances are
+    computed row-for-row on the same fp values, `topr_merge` and the
+    frontier argmin break ties by position (and positions are preserved —
+    packing is a stable compaction whose dropped slots carry +inf, which
+    sorts last), visited/dedup logic compares ids for equality only, and
+    the dense visited set is positional.  The hashed visited set is
+    bitwise-exact at `visited_cap >= N` (identity-mod probing is injective
+    there); below that, collisions depend on id values, so renumbering can
+    change which re-expansions occur — same contract as the hashed tier
+    itself (tests/test_search_parity.py).
+  * Pruning (3) intentionally changes results and is OFF by default so
+    the equivalence tier (tests/test_layout.py) stays exact; flipping it
+    on is an accuracy/speed trade recorded by fig6/EXPERIMENTS §L1.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as L
+from repro.core import vecstore as VS
+from repro.core.search import SearchResult, medoid
+from repro.core.search import search as run_search
+
+ORDERS = ("identity", "hub", "bfs")
+
+
+# ---------------------------------------------------------------------------
+# packed fixed-degree adjacency
+# ---------------------------------------------------------------------------
+
+def packed_degree(graph_ids) -> int:
+    """Max out-degree over rows — the tightest D that loses no edges."""
+    g = np.asarray(graph_ids)
+    return max(int(np.max(np.sum(g >= 0, axis=-1), initial=0)), 1)
+
+
+def pack_adjacency(graph_ids, degree: int | None = None) -> np.ndarray:
+    """Compact (N, R) pools to a degree-fixed (N, D) packed adjacency.
+
+    Valid ids are moved to the front of each row with a STABLE compaction
+    (preserving the ascending-distance rank order `topr_merge` maintains),
+    then rows are -1-padded or rank-truncated to exactly `degree` columns.
+    `degree=None` uses the max row degree — lossless, and the default
+    `optimize()` uses so the bitwise tier stays exact (truncation drops
+    real edges and changes results).
+    """
+    g = np.ascontiguousarray(np.asarray(graph_ids), dtype=np.int32)
+    n, r = g.shape
+    if degree is None:
+        degree = packed_degree(g)
+    assert degree >= 1, degree
+    # stable argsort of the "is-sentinel" flag floats valid ids to the
+    # front in original (rank) order
+    order = np.argsort(g < 0, axis=1, kind="stable")
+    packed = np.take_along_axis(g, order, axis=1)
+    if degree <= r:
+        packed = packed[:, :degree]
+    else:
+        packed = np.concatenate(
+            [packed, np.full((n, degree - r), -1, np.int32)], axis=1)
+    return np.ascontiguousarray(packed, dtype=np.int32)
+
+
+def unpack_adjacency(packed, r: int) -> np.ndarray:
+    """Inverse of `pack_adjacency` back to pool width `r` (-1 tail pad).
+
+    Round-trip law (tests/test_layout.py property tier): for any pool row
+    with degree ≤ D, `unpack(pack(g, D), R)` equals `pack(g, R)` — the
+    canonical packed form at the original width.
+    """
+    p = np.asarray(packed, dtype=np.int32)
+    n, d = p.shape
+    assert r >= d, (r, d)
+    return np.concatenate([p, np.full((n, r - d), -1, np.int32)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# vertex orderings
+# ---------------------------------------------------------------------------
+
+def order_permutation(graph_ids, order: str, *, entry: int = 0,
+                      valid=None) -> np.ndarray:
+    """Deterministic locality permutation, `perm[old] = new`.
+
+    "bfs":  breadth-first levels from `entry` (the medoid in `optimize()`),
+            within-level ascending original id; unreached / dead vertices
+            keep their relative order at the tail.  Neighbor rows the beam
+            gathers early land in adjacent pages.
+    "hub":  descending in-degree (ties by original id) — high-traffic rows
+            first, the CAGRA "frequently visited nodes first" layout; dead
+            vertices go last regardless of stale in-edges.
+    "identity": no-op (packing only).
+    """
+    assert order in ORDERS, order
+    g = np.asarray(graph_ids)
+    n = g.shape[0]
+    ok = (np.ones(n, bool) if valid is None
+          else np.asarray(valid, dtype=bool).copy())
+    if order == "identity":
+        return np.arange(n, dtype=np.int64)
+    if order == "hub":
+        flat = g[(g >= 0) & ok[np.clip(g, 0, n - 1)]]
+        indeg = np.bincount(flat, minlength=n)
+        # lexsort: last key is primary — live first, then in-degree desc,
+        # then original id asc
+        new_to_old = np.lexsort((np.arange(n), -indeg, ~ok))
+    else:  # bfs
+        seen = np.zeros(n, bool)
+        levels = []
+        entry = int(entry)
+        if ok[entry]:
+            seen[entry] = True
+            frontier = np.array([entry], dtype=np.int64)
+        else:
+            frontier = np.array([], dtype=np.int64)
+        while frontier.size:
+            levels.append(frontier)
+            nxt = g[frontier].ravel()
+            nxt = np.unique(nxt[nxt >= 0])       # sorted ⇒ deterministic
+            nxt = nxt[ok[nxt] & ~seen[nxt]]
+            seen[nxt] = True
+            frontier = nxt
+        tail = np.flatnonzero(~seen)             # unreached + dead, in order
+        new_to_old = (np.concatenate(levels + [tail]) if levels else tail)
+    perm = np.empty(n, dtype=np.int64)
+    perm[new_to_old] = np.arange(n, dtype=np.int64)
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# detour-count pruning (CAGRA §4.2)
+# ---------------------------------------------------------------------------
+
+def detour_counts(ids, dists, *, chunk: int = 512) -> np.ndarray:
+    """Per-edge detour counts for rank-sorted pools.
+
+    The edge v→u (rank j in v's row) is detourable via the closer
+    neighbor w = ids[v, i] (i < j ⇒ d(v,w) ≤ d(v,u)) when additionally
+    d(w,u) < d(v,u): the walk can reach u through w with two strictly
+    shorter hops.  Counts how many such w exist per edge.  Runs chunked
+    on the host — a one-shot index build step, not a hot path.
+    """
+    ids = np.asarray(ids)
+    dists = np.asarray(dists, dtype=np.float32)
+    n, r = ids.shape
+    counts = np.zeros((n, r), dtype=np.int32)
+    safe = np.clip(ids, 0, n - 1)
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        iv = ids[lo:hi]                               # (C, R) v→u ids
+        dv = dists[lo:hi]                             # (C, R) d(v, ·)
+        # d(w, u) for every (w=rank i, u=rank j) pair: gather w's pool and
+        # look u up in it; u absent from w's pool ⇒ treat as far (no detour
+        # counted) — conservative, matches CAGRA's pool-local heuristic.
+        w_pool_ids = ids[safe[lo:hi]]                 # (C, R, R)
+        w_pool_d = dists[safe[lo:hi]]                 # (C, R, R)
+        match = w_pool_ids[:, :, None, :] == iv[:, None, :, None]
+        # (C, Rw, Ru): min d(w,u) over w's slots naming u (inf if absent)
+        dwu = np.where(match, w_pool_d[:, :, None, :], np.inf).min(axis=-1)
+        ok_w = (iv >= 0)[:, :, None] & (iv >= 0)[:, None, :]
+        ranks = np.arange(r)
+        closer = ranks[:, None] < ranks[None, :]      # (Rw, Ru): i < j
+        detour = ok_w & closer[None] & (dwu < dv[:, None, :])
+        counts[lo:hi] = detour.sum(axis=1, dtype=np.int32)
+    return counts
+
+
+def prune_adjacency(ids, dists, degree: int, *, chunk: int = 512) -> np.ndarray:
+    """Keep the `degree` edges per row with the fewest detours.
+
+    Ties break by distance rank (the pool order), and kept edges are
+    re-sorted by rank so the packed row stays ascending-distance — the
+    invariant every consumer of graph rows assumes.
+    """
+    ids = np.asarray(ids)
+    n, r = ids.shape
+    degree = min(degree, r)
+    counts = detour_counts(ids, dists, chunk=chunk)
+    rank = np.broadcast_to(np.arange(r, dtype=np.int64), (n, r))
+    key = counts.astype(np.int64) * (r + 1) + rank
+    key = np.where(ids >= 0, key, np.iinfo(np.int64).max)
+    keep = np.sort(np.argsort(key, axis=1, kind="stable")[:, :degree], axis=1)
+    kept = np.take_along_axis(ids, keep, axis=1).astype(np.int32)
+    return pack_adjacency(kept, degree)
+
+
+# ---------------------------------------------------------------------------
+# the optimized index
+# ---------------------------------------------------------------------------
+
+class OptimizedIndex(NamedTuple):
+    """A search-ready index in optimized layout.
+
+    All array fields live in PERMUTED row order; `inv` (new → old) is the
+    `ids_map` handed to the search so returned ids are in the caller's
+    original numbering.  `order`, `degree`, `pruned` are provenance.
+    """
+    x: object                      # fp32 array or VectorStore, rows permuted
+    graph_ids: jnp.ndarray         # (N, D) packed adjacency, permuted ids
+    entry: jnp.ndarray             # int32 — permuted medoid
+    inv: jnp.ndarray               # (N,) int32: inv[new] = old
+    perm: jnp.ndarray              # (N,) int32: perm[old] = new
+    valid: jnp.ndarray | None      # permuted tombstone mask
+    rescore: object | None         # permuted fp32 rescore tier
+    vwords: jnp.ndarray | None     # permuted packed label words
+    order: str
+    degree: int
+    pruned: bool
+
+    @property
+    def n(self) -> int:
+        return int(self.graph_ids.shape[0])
+
+    def search(self, queries, **kw) -> SearchResult:
+        """`core.search.search` over the optimized layout; returned ids
+        are in ORIGINAL numbering (the inverse permutation is applied
+        on-device)."""
+        kw.setdefault("entry", self.entry)
+        kw.setdefault("valid", self.valid)
+        kw.setdefault("rescore", self.rescore)
+        if self.vwords is not None:
+            kw.setdefault("labels", self.vwords)
+        return run_search(self.x, self.graph_ids, queries,
+                          ids_map=self.inv, **kw)
+
+    def distributed_search(self, mesh, axes, queries,
+                           **kw) -> SearchResult:
+        from repro.core import distributed as D
+        kw.setdefault("entry", self.entry)
+        kw.setdefault("valid", self.valid)
+        kw.setdefault("rescore", self.rescore)
+        if self.vwords is not None:
+            kw.setdefault("labels", self.vwords)
+        return D.distributed_search(mesh, axes, self.x, self.graph_ids,
+                                    queries, ids_map=self.inv, **kw)
+
+
+def optimize(
+    x,
+    graph,
+    *,
+    order: str = "bfs",
+    degree: int | None = None,
+    prune: bool = False,
+    valid=None,
+    rescore=None,
+    labels=None,
+    entry=None,
+    permutation=None,
+) -> OptimizedIndex:
+    """Build an `OptimizedIndex` from a built graph (the post-build pass).
+
+    `graph` is a `pools.Pool` or a raw (N, R) id array (pruning needs the
+    Pool — it reads the rank distances).  `degree=None` packs to the max
+    row degree (lossless); an explicit smaller `degree` truncates by rank,
+    or — with `prune=True` — by CAGRA detour count.  `order` picks the
+    renumbering ("bfs" | "hub" | "identity"); `permutation` overrides it
+    with an explicit old→new map (the property-test hook).  `labels` may
+    be a LabelStore or packed (N, W) words; `entry` defaults to the medoid
+    computed on the ORIGINAL arrays (see the permutation contract above).
+    """
+    ids = np.asarray(graph.ids if hasattr(graph, "ids") else graph)
+    n = ids.shape[0]
+    assert (VS.parts(x)[0]).shape[0] == n, "x rows must match graph rows"
+
+    if entry is None:
+        entry = medoid(x, None if valid is None else jnp.asarray(valid))
+    e_old = int(entry)
+
+    if prune:
+        assert hasattr(graph, "dists"), \
+            "detour pruning needs a Pool (rank distances)"
+        d = degree if degree is not None else packed_degree(ids)
+        packed = prune_adjacency(ids, graph.dists, d)
+    else:
+        packed = pack_adjacency(ids, degree)
+
+    if permutation is not None:
+        perm = np.asarray(permutation, dtype=np.int64)
+        assert perm.shape == (n,)
+        chk = np.zeros(n, bool)
+        chk[perm] = True
+        assert chk.all(), "permutation must be a bijection on [0, N)"
+    else:
+        perm = order_permutation(packed, order, entry=e_old, valid=valid)
+    order_tag = "custom" if permutation is not None else order
+
+    inv = np.argsort(perm)                       # inv[new] = old
+    perm_d = jnp.asarray(perm.astype(np.int32))
+    inv_d = jnp.asarray(inv.astype(np.int32))
+
+    g = jnp.asarray(packed)
+    g = jnp.where(g >= 0, perm_d[jnp.clip(g, 0)], -1)[inv_d]
+
+    xd, xs, xo = VS.parts(x)
+    xp = (VS.VectorStore(jnp.asarray(xd)[inv_d], xs, xo) if xs is not None
+          else jnp.asarray(xd)[inv_d])
+    valid_p = None if valid is None else jnp.asarray(valid)[inv_d]
+    rescore_p = None
+    if rescore is not None:
+        rd, rs, ro = VS.parts(rescore)
+        rescore_p = (VS.VectorStore(jnp.asarray(rd)[inv_d], rs, ro)
+                     if rs is not None else jnp.asarray(rd)[inv_d])
+    vwords_p = None
+    if labels is not None:
+        vwords_p = L.store_words(labels)[inv_d]
+
+    return OptimizedIndex(
+        x=xp, graph_ids=g, entry=perm_d[e_old].astype(jnp.int32),
+        inv=inv_d, perm=perm_d, valid=valid_p, rescore=rescore_p,
+        vwords=vwords_p, order=order_tag, degree=int(g.shape[1]),
+        pruned=bool(prune))

@@ -135,6 +135,7 @@ def _search_impl(
     rescore,
     vwords: jnp.ndarray | None,
     fwords: jnp.ndarray | None,
+    ids_map: jnp.ndarray | None,
     *,
     k: int,
     ef: int,
@@ -284,7 +285,14 @@ def _search_impl(
         d_exact = jnp.where(out_ids >= 0, d_exact, jnp.inf)
         out_ids, out_dists = ops.topr_merge(out_ids, d_exact, ef)
 
-    return SearchResult(out_ids[:, :k], out_dists[:, :k], n_exp)
+    out_ids, out_dists = out_ids[:, :k], out_dists[:, :k]
+    if ids_map is not None:
+        # optimized layout (core/layout.py): the graph rows are permuted;
+        # one final gather converts internal row indices back to the
+        # caller's original numbering.  Runs AFTER the k-slice and the
+        # rescore re-rank, so everything upstream is untouched.
+        out_ids = jnp.where(out_ids >= 0, ids_map[jnp.clip(out_ids, 0)], -1)
+    return SearchResult(out_ids, out_dists, n_exp)
 
 
 def search(
@@ -303,6 +311,7 @@ def search(
     labels=None,
     filter=None,
     overfetch: int = 4,
+    ids_map: jnp.ndarray | None = None,
 ) -> SearchResult:
     """Search the graph for the k nearest vertices to each query row.
 
@@ -342,6 +351,12 @@ def search(
     raise `ef` toward ~k/selectivity (the over-fetch policy, DESIGN.md
     §9.3).  None (the default) keeps the unfiltered path bit-for-bit —
     the predicate operands are absent from the compiled program entirely.
+
+    `ids_map` is the optimized-layout inverse permutation (core/layout.py):
+    an (N,) int32 map applied to the returned ids in one final gather, so
+    an index whose rows were renumbered for locality still reports ids in
+    the caller's original numbering.  None (the default) keeps the
+    unmapped path bit-for-bit (the gather is absent from the trace).
     """
     assert ef >= k
     assert visited in ("dense", "hashed"), visited
@@ -360,7 +375,7 @@ def search(
     else:
         cap = visited_cap if visited_cap is not None else default_visited_cap(ef)
     return _search_impl(x, graph_ids, queries, entry, valid, rescore,
-                        vwords, fwords,
+                        vwords, fwords, ids_map,
                         k=k, ef=ef, max_steps=max_steps,
                         visited=visited, visited_cap=cap,
                         backend=ops.effective_backend())

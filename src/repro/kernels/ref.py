@@ -175,6 +175,10 @@ def search_expand_ref(
       queries: (Q, D) query vectors.
       nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex;
                -1 marks an invalid entry (inactive query / empty slot).
+               Width-agnostic: R is the raw pool width or the packed
+               degree D of an optimized layout (core/layout.py); packed
+               rows keep their sentinels as a tail suffix, which changes
+               nothing here (the mask is positionless).
       table:   (Q, H) int32 open-addressed visited table; -1 = empty slot.
       valid:   optional (N,) bool vertex-validity mask (the dynamic index's
                tombstone mask, core/dynamic.py).  A neighbor whose vertex is

@@ -46,6 +46,16 @@ Table *updates* stay outside the kernel (core/search.py inserts after the
 step); the kernel is a pure read.  A (Q, 1) all-empty table turns the probe
 into a no-op, which is how the dense-visited path shares this kernel.
 
+Graph-row layout contract (core/layout.py): callers hand this kernel the
+ALREADY-GATHERED (Q, R) neighbor-id rows of the selected vertices, so the
+optimized index's packed fixed-degree adjacency needs no kernel variant —
+R simply becomes the packed degree D.  The packed rows additionally
+guarantee -1 sentinels appear only as a tail suffix (rank-ordered valid ids
+first), which the kernel tolerates anywhere but the DMA schedule rewards:
+a packed row's clamped sentinel gathers are contiguous repeats of row 0
+instead of interleaved holes, and the locality renumbering makes the
+nb_ref[q, rr] row indices near-sequential across the beam.
+
 Semantics match `ref.search_expand_ref` bitwise under a common jit context
 (tests/test_search_parity.py): probe positions follow the same
 identity-mod + linear-probe formula and the distance reduction follows the
@@ -178,7 +188,10 @@ def search_expand_pallas(
       queries: (Q, D) query vectors (always fp32 — only the stored dataset
                side rides the ladder).
       nbrs:    (Q, R) int32 neighbor ids of each query's selected vertex,
-               -1 = invalid (inactive query or empty graph slot).
+               -1 = invalid (inactive query or empty graph slot).  R is
+               the graph row width: the pool width of a raw GRNND index,
+               or the packed degree D of an optimized layout
+               (core/layout.py) — the kernel is width-agnostic.
       table:   (Q, H) int32 open-addressed visited table, -1 = empty slot.
       valid:   optional (N,) bool/int32 vertex-validity mask (tombstones,
                core/dynamic.py).  Stays in HBM next to x; each neighbor's

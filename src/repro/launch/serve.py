@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import brute_force_knn, recall_at_k, vecstore
 from repro.core import labels as lab
+from repro.core import layout
 from repro.core.distributed import distributed_search
 from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.pools import Pool
@@ -98,6 +99,14 @@ def main():
     ap.add_argument("--refine-rounds", type=int, default=None,
                     help="localized propagation rounds per insert batch "
                          "(only with --mutable; default 2)")
+    ap.add_argument("--optimize-layout", default=None,
+                    choices=list(layout.ORDERS),
+                    help="run the post-build layout pass (core/layout.py, "
+                         "DESIGN.md §10) before serving: packed fixed-"
+                         "degree adjacency + the chosen vertex renumbering; "
+                         "results are bitwise-identical, ids stay in the "
+                         "original numbering.  With --mutable, slots are "
+                         "renumbered at startup and after every compact()")
     ap.add_argument("--filter-labels", type=int, default=0,
                     help="filtered serving: synthetic per-vertex labels in "
                          "[0, L); each query gets a random allowed-label "
@@ -150,6 +159,19 @@ def main():
 
     lstore, sel, ef = _filter_setup(args, x.shape[0])
 
+    words = None if lstore is None else lstore.words
+    ids_map = None
+    if args.optimize_layout:
+        # the post-build layout pass (DESIGN.md §10): every index-side
+        # operand is permuted together and `ids_map` restores original
+        # numbering on the way out, so gt scoring below is untouched
+        opt = layout.optimize(xt, ids, order=args.optimize_layout,
+                              rescore=rescore, labels=words, entry=entry)
+        xt, ids, entry, rescore = opt.x, opt.graph_ids, opt.entry, opt.rescore
+        ids_map = opt.inv
+        if words is not None:
+            words = opt.vwords
+
     mesh = None
     if args.shards > 0:
         mesh = jax.make_mesh((args.shards,), ("data",),
@@ -163,12 +185,15 @@ def main():
         entry = jax.device_put(entry, rep)
         if rescore is not None:
             rescore = jax.device_put(rescore, rep)
+        if ids_map is not None:
+            ids_map = jax.device_put(ids_map, rep)
 
     def run_batch(q, fwords):
         kw = dict(k=args.k, ef=ef, entry=entry, visited=args.visited,
-                  visited_cap=args.visited_cap, rescore=rescore)
+                  visited_cap=args.visited_cap, rescore=rescore,
+                  ids_map=ids_map)
         if lstore is not None:
-            kw.update(labels=lstore.words, filter=fwords)
+            kw.update(labels=words, filter=fwords)
         if mesh is None:
             return search(xt, ids, q, **kw)
         return distributed_search(mesh, ("data",), xt, ids, q, **kw)
@@ -208,6 +233,7 @@ def main():
           f"backend={ops.effective_backend()}  visited={args.visited}  "
           f"precision={args.precision}  bpv={bpv:.0f}  "
           f"rescore={int(rescore is not None)}  "
+          f"opt_layout={args.optimize_layout or 'none'}  "
           f"shards={max(args.shards, 1)}")
 
 
@@ -244,7 +270,8 @@ def serve_mutable(args, x, dists, ids):
     nl = args.filter_labels
     idx = DynamicIndex(x, Pool(ids, dists),
                        DynamicConfig(refine_rounds=rounds,
-                                     precision=args.precision),
+                                     precision=args.precision,
+                                     layout=args.optimize_layout),
                        vertex_labels=(None if lstore is None
                                       else lstore.labels),
                        n_labels=nl if lstore is not None else None)
@@ -259,7 +286,10 @@ def serve_mutable(args, x, dists, ids):
                            jax.random.randint(jax.random.fold_in(kb, 3),
                                               (churn,), 0, nl), np.int32)))
             live = idx.labels[:idx.size][np.asarray(idx.valid[:idx.size])]
-            idx.delete(live[:churn])  # oldest live: a sliding-window corpus
+            # oldest live = smallest labels: a sliding-window corpus.  Sort
+            # first — under a layout permutation slot order is NOT label
+            # order (core/layout.py)
+            idx.delete(np.sort(live)[:churn])
         t_mut = time.perf_counter() - t0
 
         q = synthetic.queries_from(jax.random.fold_in(kb, 1), x,
@@ -287,10 +317,14 @@ def serve_mutable(args, x, dists, ids):
             # returned external label's slot must pass its predicate
             # (the canonical check, lab.predicate_fraction, runs on slots)
             r_ids = np.asarray(res.ids)
-            slots = np.clip(np.searchsorted(idx.labels[:idx.size],
-                                            np.clip(r_ids, 0, None)),
-                            0, idx.size - 1)
-            slots = np.where(r_ids >= 0, slots, -1)
+            table = idx.labels[:idx.size]
+            # argsort-backed lookup: identical to the plain binary search
+            # without a layout permutation, correct with one
+            sorter = np.argsort(table, kind="stable")
+            pos = np.clip(np.searchsorted(table, np.clip(r_ids, 0, None),
+                                          sorter=sorter),
+                          0, idx.size - 1)
+            slots = np.where(r_ids >= 0, sorter[pos], -1)
             preds.append(lab.predicate_fraction(jnp.asarray(slots), fw,
                                                 idx.label_words()))
 
@@ -306,7 +340,8 @@ def serve_mutable(args, x, dists, ids):
           f"live={idx.n_live}  tomb={idx.tombstone_fraction:.2f}  "
           f"rounds={idx.rounds_run}  "
           f"backend={ops.effective_backend()}  visited={args.visited}  "
-          f"precision={args.precision}  mutable=1")
+          f"precision={args.precision}  "
+          f"opt_layout={args.optimize_layout or 'none'}  mutable=1")
 
 
 if __name__ == "__main__":

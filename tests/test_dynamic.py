@@ -282,6 +282,98 @@ def test_all_dead_index_returns_empty_results():
 
 
 # ---------------------------------------------------------------------------
+# optimized layout on the dynamic index (ISSUE 6): external-label stability
+# ---------------------------------------------------------------------------
+
+def _paired_indices(small_index, order="bfs"):
+    """The same corpus/graph as two DynamicIndexes: raw slot layout vs
+    `DynamicConfig(layout=...)` (renumbered at construction and after
+    every compaction)."""
+    x, pool = small_index
+    plain = DynamicIndex(x, pool, DynamicConfig(refine_rounds=1,
+                                                compact_threshold=0.9))
+    laid = DynamicIndex(x, pool, DynamicConfig(refine_rounds=1,
+                                               compact_threshold=0.9,
+                                               layout=order))
+    return plain, laid
+
+
+def test_layout_index_bitwise_equal_at_construction(small_index, corpus):
+    """Before any mutation the layout is pure renumbering: label-space
+    results are bitwise identical to the raw-slot index."""
+    _, q, _ = corpus
+    plain, laid = _paired_indices(small_index)
+    a = plain.search(q, k=K, ef=EF)
+    b = laid.search(q, k=K, ef=EF)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+def test_layout_index_label_stability_under_churn(small_index, corpus):
+    """Insert/delete on an optimized index issues the SAME external labels
+    as the raw-slot index, deleted labels stay gone, and recall against
+    the live ground truth holds — the layout must be invisible to the
+    label-space API across mutations."""
+    x, q, _ = corpus
+    plain, laid = _paired_indices(small_index)
+    for rnd in range(3):
+        lo = 600 + 30 * rnd
+        la = plain.insert(x[lo:lo + 30])
+        lb = laid.insert(x[lo:lo + 30])
+        np.testing.assert_array_equal(la, lb)       # identical new labels
+        dels = np.arange(5 * rnd, 600, 37)
+        assert plain.delete(dels) == laid.delete(dels)
+    def live(idx):
+        v = np.asarray(idx.valid[:idx.size])
+        return set(np.asarray(idx.labels[:idx.size])[v].tolist())
+
+    assert live(plain) == live(laid)
+    np.testing.assert_array_equal(np.asarray(plain.exact_knn(q, K)),
+                                  np.asarray(laid.exact_knn(q, K)))
+    res = laid.search(q, k=K, ef=EF)
+    got = set(np.asarray(res.ids).ravel().tolist()) - {-1}
+    assert got <= live(laid)                        # deleted never returned
+    rec = recall.recall_at_k(res.ids, laid.exact_knn(q, K))
+    assert rec >= 0.80, rec
+
+
+def test_layout_compact_reoptimizes_exactly(small_index, corpus):
+    """compact() on a layout-configured index re-runs the layout pass on
+    the survivors — and must STILL preserve label-space results exactly,
+    the test_compact_preserves_search_exactly contract through a second
+    renumbering."""
+    _, q, _ = corpus
+    _, laid = _paired_indices(small_index)
+    rng = np.random.default_rng(12)
+    dels = rng.choice(600, size=200, replace=False)
+    laid.delete(np.sort(dels))
+    before = laid.search(q, k=K, ef=EF)
+    gt_before = laid.exact_knn(q, K)
+    laid.compact()
+    assert laid.cfg.layout == "bfs"                 # sticky re-optimize
+    assert laid.size == laid.n_live == 400
+    after = laid.search(q, k=K, ef=EF)
+    np.testing.assert_array_equal(np.asarray(before.ids),
+                                  np.asarray(after.ids))
+    np.testing.assert_array_equal(np.asarray(before.dists),
+                                  np.asarray(after.dists))
+    np.testing.assert_array_equal(np.asarray(gt_before),
+                                  np.asarray(laid.exact_knn(q, K)))
+
+
+def test_optimize_layout_is_idempotent_bitwise(small_index, corpus):
+    """Re-running the layout pass on an already-optimized index permutes
+    slots again but may never change label-space results."""
+    _, q, _ = corpus
+    _, laid = _paired_indices(small_index, order="hub")
+    a = laid.search(q, k=K, ef=EF)
+    laid.optimize_layout("hub")
+    b = laid.search(q, k=K, ef=EF)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+# ---------------------------------------------------------------------------
 # distributed routing: owner-shard insert == single-device insert
 # ---------------------------------------------------------------------------
 
