@@ -1,0 +1,186 @@
+"""Fig 13 (beyond the paper): corpus-sharded index — the N-ceiling sweep
+(DESIGN.md §11).
+
+The replicated layout puts every O(N) operand (vectors, graph, rescore
+tier, labels, id map) on EVERY device, so the largest servable corpus is
+capped by ONE device's memory.  Corpus sharding slices those operands
+into S contiguous partitions — each device holds N/S rows — and runs the
+same beam search with per-step owner-combines (bitwise-identical to the
+replicated search; tests/test_corpus_shard.py is the lock).  This sweep
+measures both sides of that trade:
+
+  * memory: per-shard bytes of O(N) index state vs the replicated
+    baseline (`core.corpus_shard.memory_report`) — the ceiling moves by
+    ~1/S, which is the entire point;
+  * quality: the divide-and-conquer build (`sharded_build`: independent
+    per-partition GRNND + cross-boundary merge-refine) must still clear
+    the tests/test_recall.py floor (0.86 @ ef=48), searched through the
+    corpus-sharded path itself.
+
+Row names are `fig13/<dataset>/S<shards><backend-tag>`; every row
+carries the schema-validated `corpus_shards=` field (benchmarks/run.py
+SMOKE_SCHEMA 5) plus `shard_mb=`/`repl_mb=` for the memory story.
+
+    PYTHONPATH=src python benchmarks/fig13_corpus_sharded.py [--backend ref]
+    PYTHONPATH=src python benchmarks/fig13_corpus_sharded.py --smoke
+
+`--smoke` is the acceptance gate: a tiny interpret-mode sweep whose rows
+are parsed and validated in-process — S=1 and S>1 cells per dataset,
+recall@10 >= 0.86 on every row, and per-shard bytes strictly below the
+replicated baseline wherever S>1 — non-zero exit on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig13_corpus_sharded.py`
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+
+from benchmarks import common as C
+from repro.core import corpus_shard as CS, grnnd, recall as R
+
+SMOKE_N = 192
+SHARD_COUNTS = (1, 2, 4)
+RECALL_FLOOR = 0.86  # tests/test_recall.py disordered floor, ef=48
+
+_REC_RE = re.compile(r"(?:^|\s)recall=(\S+)")
+_SHARD_MB_RE = re.compile(r"(?:^|\s)shard_mb=(\S+)")
+_REPL_MB_RE = re.compile(r"(?:^|\s)repl_mb=(\S+)")
+
+
+def run(n: int = 3000, backend: str | None = None,
+        shard_counts=SHARD_COUNTS) -> list[str]:
+    """`backend` applies to build AND sharded search; ground truth keeps
+    exact fp32 ambient-backend brute force (from bench_datasets)."""
+    eff, tag = C.resolve_backend(backend)
+    interp = eff == "interpret"
+    if interp:
+        n = min(n, C.INTERPRET_MAX_N)
+        # interpret steps kernel grids from Python; two shard counts
+        # already exercise the S=1 fallback and the real sharded path
+        shard_counts = tuple(s for s in shard_counts if s <= 2)
+    nq, repeats = (32, 1) if interp else (96, 3)
+    # interpret: fast-tier shape (Python-stepped kernel grids); full scale:
+    # the fig10/fig11/fig12 build shape — the fast-tier graph is too sparse
+    # to clear the recall floor at n=3000
+    cfg = (grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16)
+           if interp else
+           grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                             pairs_per_vertex=24))
+
+    rows = []
+    datasets = list(C.bench_datasets(n=n, nq=nq).items())
+    if interp:
+        datasets = datasets[:1]  # same smoke-budget rationale as fig12
+    for name, (x, q, gt) in datasets:
+        for s in shard_counts:
+            # full scale needs two extra merge-refine rounds for the
+            # hardest (960-d gist-like) corpus to clear the floor at S=4;
+            # the tiny smoke corpus converges at the default
+            mr = 3 if interp else 5
+            with C.backend_scope(backend):
+                t0 = time.perf_counter()
+                pool = CS.sharded_build(jax.random.PRNGKey(2), x, cfg, s,
+                                        merge_rounds=mr)
+                pool.ids.block_until_ready()
+                t_build = time.perf_counter() - t0
+                idx = CS.shard(x, pool.ids, s)
+                res = idx.search(q, k=C.K, ef=C.EF)  # compile + warm
+                res.ids.block_until_ready()
+                times = []
+                for _ in range(repeats):
+                    t1 = time.perf_counter()
+                    res = idx.search(q, k=C.K, ef=C.EF)
+                    res.ids.block_until_ready()
+                    times.append(time.perf_counter() - t1)
+            qps = q.shape[0] / min(times)
+            rec = R.recall_at_k(res.ids, gt)
+            mem = CS.memory_report(idx)
+            rows.append(C.row(
+                f"fig13/{name}/S{s}{tag}", 1.0 / qps,
+                f"recall={rec:.3f} qps={qps:.0f} corpus_shards={s} "
+                f"shard_mb={mem['per_shard_bytes'] / 2**20:.4f} "
+                f"repl_mb={mem['replicated_bytes'] / 2**20:.4f} "
+                f"build_s={t_build:.2f} ef={C.EF} backend={eff}",
+                bytes_per_vector=C.fp32_bpv(x)))
+    return rows
+
+
+def validate_corpus_rows(parsed: list[dict]) -> None:
+    """The fig13 acceptance gate (shared with benchmarks/run.py).
+
+    Raises ValueError unless every fig13 row carries `corpus_shards=`
+    and clears the recall floor, every S>1 row holds strictly less
+    per-shard memory than its replicated baseline (the N-ceiling claim),
+    and each dataset covers both the S=1 baseline and at least one
+    genuinely sharded cell.
+    """
+    fig13 = [p for p in parsed if p["name"].startswith("fig13/")]
+    if not fig13:
+        raise ValueError("no fig13 rows to validate")
+    seen: dict[str, set] = {}
+    for p in fig13:
+        ds = p["name"].split("/")[1]
+        s = p.get("corpus_shards")
+        if s is None:
+            raise ValueError(f"fig13 row lacks corpus_shards=: {p['name']}")
+        seen.setdefault(ds, set()).add(s)
+        rec = _REC_RE.search(p["derived"])
+        if not rec:
+            raise ValueError(f"fig13 row lacks recall=: {p!r}")
+        if float(rec.group(1)) < RECALL_FLOOR:
+            raise ValueError(
+                f"{p['name']}: sharded-build recall {rec.group(1)} below "
+                f"the {RECALL_FLOOR} floor")
+        shard_mb = _SHARD_MB_RE.search(p["derived"])
+        repl_mb = _REPL_MB_RE.search(p["derived"])
+        if not shard_mb or not repl_mb:
+            raise ValueError(f"fig13 row lacks shard_mb=/repl_mb=: {p!r}")
+        if s > 1 and float(shard_mb.group(1)) >= float(repl_mb.group(1)):
+            raise ValueError(
+                f"{p['name']}: per-shard memory {shard_mb.group(1)}MB is "
+                f"not below the replicated {repl_mb.group(1)}MB — the "
+                "N-ceiling claim fails")
+    for ds, got in seen.items():
+        if 1 not in got or not any(s > 1 for s in got):
+            raise ValueError(
+                f"fig13/{ds} must cover the S=1 baseline and an S>1 "
+                f"sharded cell; got S={sorted(got)}")
+
+
+def smoke() -> None:
+    """Tiny interpret-mode sweep + in-process contract validation."""
+    from benchmarks.run import parse_row
+    rows = run(n=SMOKE_N, backend="interpret")
+    for r in rows:
+        print(r, flush=True)
+    validate_corpus_rows([parse_row(r) for r in rows])
+    print("# fig13 smoke: recall floor + memory-ceiling contract OK",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for build + sharded search "
+                         "(default: current REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--n", type=int, default=3000,
+                    help="vectors per dataset (interpret runs are capped "
+                         f"at {C.INTERPRET_MAX_N})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode sweep, self-validating "
+                         "(non-zero exit on recall/memory violations)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(n=args.n, backend=args.backend):
+            print(row, flush=True)

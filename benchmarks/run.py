@@ -24,7 +24,7 @@ import sys
 import time
 
 ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-       "roofline")
+       "fig13", "roofline")
 
 # the artifact contract: bump ONLY with a matching update to every consumer
 # of the perf trajectory (EXPERIMENTS.md §Tables tooling)
@@ -39,7 +39,11 @@ ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
 # for the raw pool layout or the ordering(+pruned-degree) tag of an
 # optimized index — required on every fig6 row, and the fig6 validator
 # gates QPS(optimized) >= QPS(baseline) per (dataset, ef) (ISSUE 6)
-SMOKE_SCHEMA = 4
+# schema 5: corpus-sharded rows (fig13) carry `corpus_shards=` (int >= 1,
+# core/corpus_shard.py) — required on every fig13 row, and the fig13
+# validator gates the recall floor plus per-shard memory < replicated
+# wherever S > 1 (the N-ceiling claim, ISSUE 7)
+SMOKE_SCHEMA = 5
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
 _PRECISIONS = ("fp32", "bf16", "int8")
@@ -47,8 +51,10 @@ _PREC_RE = re.compile(r"(?:^|\s)precision=(\S+)")
 _BPV_RE = re.compile(r"(?:^|\s)bpv=(\S+)")
 _SEL_RE = re.compile(r"(?:^|\s)selectivity=(\S+)")
 _OPT_RE = re.compile(r"(?:^|\s)opt_layout=([\w.-]+)")
+_CS_RE = re.compile(r"(?:^|\s)corpus_shards=(\S+)")
 # families the smoke artifact must always cover (one per serving surface)
-SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "roofline")
+SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "fig13",
+                  "roofline")
 
 
 def _module(name: str):
@@ -68,6 +74,8 @@ def _module(name: str):
         from benchmarks import fig11_precision as m
     elif name == "fig12":
         from benchmarks import fig12_filtered as m
+    elif name == "fig13":
+        from benchmarks import fig13_corpus_sharded as m
     elif name == "roofline":
         from benchmarks import roofline as m
     else:
@@ -90,6 +98,11 @@ def parse_row(row: str) -> dict:
     Schema 4: an optional `opt_layout=<tag>` (graph-layout rows,
     core/layout.py) is lifted; the fig6 validator REQUIRES it on every
     fig6 row and gates QPS(optimized) >= QPS(baseline).
+
+    Schema 5: an optional `corpus_shards=<int>` (corpus-sharded rows,
+    core/corpus_shard.py) is lifted; where present it must parse as an
+    int >= 1.  The fig13 validator additionally REQUIRES it on every
+    fig13 row and gates recall + the per-shard memory reduction.
     """
     parts = row.split(",", 2)
     if len(parts) != 3:
@@ -114,10 +127,17 @@ def parse_row(row: str) -> dict:
         if not 0.0 <= sel_val <= 1.0:
             raise ValueError(f"selectivity outside [0, 1]: {row!r}")
     opt = _OPT_RE.search(derived)
+    cs = _CS_RE.search(derived)
+    cs_val = None
+    if cs:
+        cs_val = int(cs.group(1))
+        if cs_val < 1:
+            raise ValueError(f"corpus_shards below 1: {row!r}")
     return {"name": name, "us_per_call": float(us), "derived": derived,
             "precision": prec.group(1), "bytes_per_vector": bpv_val,
             "selectivity": sel_val,
-            "opt_layout": opt.group(1) if opt else None}
+            "opt_layout": opt.group(1) if opt else None,
+            "corpus_shards": cs_val}
 
 
 def validate_rows(parsed: list[dict]) -> None:
@@ -134,9 +154,11 @@ def validate_rows(parsed: list[dict]) -> None:
     from benchmarks.fig6_qps import validate_layout_rows
     from benchmarks.fig11_precision import validate_precision_rows
     from benchmarks.fig12_filtered import validate_filtered_rows
+    from benchmarks.fig13_corpus_sharded import validate_corpus_rows
     validate_layout_rows(parsed)
     validate_precision_rows(parsed)
     validate_filtered_rows(parsed)
+    validate_corpus_rows(parsed)
 
 
 def run_smoke(out_path: str) -> None:
@@ -149,6 +171,7 @@ def run_smoke(out_path: str) -> None:
         ("fig10", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig11", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig12", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig13", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("roofline", lambda m: m.run()),
     )
     for name, call in calls:

@@ -19,12 +19,25 @@ module implements it for TPU pods.  Layout:
 Determinism: identical results for any shard count, because the merge stage
 is the same order-free topr_merge dataflow as the single-device build.
 
-Serving side: `distributed_search` shards *queries* over the mesh (searches
-are embarrassingly parallel over queries; x and the graph are replicated,
-per-query search state — beam + visited set — stays shard-local, and no
-collectives run inside the loop).  With `visited="hashed"` the per-shard
-state is O(q_loc · visited_cap), independent of N — the serving layout for
-"millions of users" traffic (DESIGN.md §6.4).
+Serving side — TWO sharding layouts, two ceilings (DESIGN.md §11.4):
+
+  * `distributed_search` shards *queries* over the mesh (x and the graph
+    replicated; per-query search state — beam + visited set — stays
+    shard-local, no collectives inside the loop).  With `visited="hashed"`
+    the per-shard state is O(q_loc · visited_cap), independent of N — the
+    layout for "millions of users" traffic (DESIGN.md §6.4).  Throughput
+    scales with devices; N stays capped by ONE device's memory.
+  * `corpus_sharded_search` shards the *corpus* (core/corpus_shard.py):
+    each device owns 1/S of the vectors, graph rows, labels, valid mask,
+    rescore tier, and layout map, runs the fused expansion kernel on its
+    slice every step, and order-free owner-combine collectives (pmin /
+    pmax over single-owner contributions) reassemble the replicated beam
+    — bitwise the single-device search for any shard count
+    (tests/test_corpus_shard.py).  N scales with devices; every device
+    sees every query, so per-step latency gains S collectives.
+
+Both layouts reuse the same `topr_merge`-based order-free merges, which is
+what makes their shard-count invariance mechanical rather than statistical.
 """
 from __future__ import annotations
 
@@ -361,6 +374,124 @@ def distributed_search(
     if pad:
         res = SearchResult(res.ids[:qn], res.dists[:qn], res.n_expanded[:qn])
     return res
+
+
+@functools.lru_cache(maxsize=32)
+def _corpus_search_fn(mesh: Mesh, axes: tuple, n: int, k: int, ef: int,
+                      max_steps: int, visited: str, visited_cap: int,
+                      has_valid: bool, quantized: bool, has_rescore: bool,
+                      has_filter: bool, has_map: bool, backend: str):
+    """One jitted shard_map per (mesh, axes, corpus-search config) — the
+    corpus-sharded sibling of `_sharded_search_fn`, same caching contract.
+
+    Every O(N) operand (data, graph rows, row offsets, and the optional
+    valid / rescore / ids_map / label-word slices) arrives STACKED with a
+    leading shard axis and is sharded along `axes` on that axis — each
+    device holds a (1, n_loc, ...) slice, which is exactly the local-shard
+    view `corpus_shard._corpus_body` expects.  Queries, the entry state,
+    and the per-query predicate words replicate: under corpus sharding
+    every device walks every query, and the owner-combines inside the body
+    (`lax.pmin`/`pmax` over `axes`) reassemble the replicated beam.  The
+    body's outputs are identical on all devices (single-owner combines,
+    deterministic ops), so the out_specs are replicated.  `n` (the true
+    corpus size, distinct from S·n_loc under padding) and `backend` are
+    cache-key-only like everywhere else in this module."""
+    del backend
+    from repro.core.corpus_shard import _corpus_body
+    sspec = PSpec(axes)   # stacked shard-major operands, split on axis 0
+    rspec = PSpec()
+
+    def body(data, graphs, row0s, q_r, entry_r, entry_row_r, *extras):
+        it = iter(extras)
+        scale = next(it) if quantized else None
+        offset = next(it) if quantized else None
+        rescores = next(it) if has_rescore else None
+        valids = next(it) if has_valid else None
+        entry_valid = next(it) if has_valid else None
+        ids_maps = next(it) if has_map else None
+        vwords = next(it) if has_filter else None
+        entry_words = next(it) if has_filter else None
+        fwords = next(it) if has_filter else None
+        return _corpus_body(
+            data, scale, offset, graphs, row0s, q_r, entry_r, entry_row_r,
+            entry_valid, rescores, valids, ids_maps, vwords, entry_words,
+            fwords, n=n, k=k, ef=ef, max_steps=max_steps, visited=visited,
+            visited_cap=visited_cap, axes=axes)
+
+    in_specs = ((sspec, sspec, sspec, rspec, rspec, rspec)
+                + (rspec, rspec) * quantized
+                + (sspec,) * has_rescore
+                + (sspec, rspec) * has_valid
+                + (sspec,) * has_map
+                + (sspec, rspec, rspec) * has_filter)
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=SearchResult(rspec, rspec, rspec),
+        check_vma=False,
+    ))
+
+
+def corpus_sharded_search(
+    mesh: Mesh,
+    axes: Sequence[str],
+    index,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    ef: int,
+    max_steps: int,
+    visited: str,
+    visited_cap: int,
+    fwords: jnp.ndarray | None,
+) -> SearchResult:
+    """Run a `corpus_shard.CorpusShardedIndex` over the mesh, one shard per
+    device slot along `axes`.
+
+    This is the executor behind `corpus_shard.sharded_search(mesh=...)` —
+    arguments arrive normalized (ef widened, visited_cap resolved, the
+    filter already packed to (Q, W) words); user code should call that
+    wrapper.  The mesh's shard count along `axes` must equal
+    `index.n_shards` — the partition is baked into the stacked arrays, not
+    re-derived here.
+    """
+    axes = tuple(axes)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    assert n_shards == index.n_shards, \
+        (f"mesh carries {n_shards} shards along {axes} but the index was "
+         f"partitioned into {index.n_shards}")
+
+    quantized = index.scale is not None
+    fn = _corpus_search_fn(mesh, axes, index.n, k, ef, max_steps, visited,
+                           visited_cap, index.valids is not None, quantized,
+                           index.rescores is not None, fwords is not None,
+                           index.ids_maps is not None,
+                           ops.effective_backend())
+    sh = NamedSharding(mesh, PSpec(axes))
+    rep = NamedSharding(mesh, PSpec())
+    args = (jax.device_put(index.data, sh),
+            jax.device_put(index.graphs, sh),
+            jax.device_put(index.row0s, sh),
+            jax.device_put(queries, rep),
+            jax.device_put(index.entry, rep),
+            jax.device_put(index.entry_row, rep))
+    if quantized:
+        args += (jax.device_put(index.scale, rep),
+                 jax.device_put(index.offset, rep))
+    if index.rescores is not None:
+        args += (jax.device_put(index.rescores, sh),)
+    if index.valids is not None:
+        args += (jax.device_put(index.valids, sh),
+                 jax.device_put(index.entry_valid, rep))
+    if index.ids_maps is not None:
+        args += (jax.device_put(index.ids_maps, sh),)
+    if fwords is not None:
+        args += (jax.device_put(index.vwords, sh),
+                 jax.device_put(index.entry_words, rep),
+                 jax.device_put(fwords, rep))
+    return fn(*args)
 
 
 def sharded_apply_requests(

@@ -35,8 +35,15 @@ increasing and the argsort is the identity).
 
 The vertex-sharded distributed variant routes insertion requests to the
 owning shard with the same all-gather + local-filter exchange as the build
-(`core.distributed.sharded_apply_requests`); the tombstone mask shards
-with the pools.
+(`core.distributed.sharded_apply_requests`): construct with `mesh=` and
+the symmetric-edge staging of every insert batch runs owner-routed over
+the device mesh — identical results to the in-process staging (the same
+order-free topr_merge dataflow), proved by tests/test_corpus_shard.py.
+The tombstone mask shards with the pools, so DELETE routing is trivially
+owner-local: a delete is a scatter into the owning shard's slice of
+`valid`, no exchange at all.  `corpus_search()` serves the same index
+corpus-sharded (core/corpus_shard.py): each shard owns its slice of the
+padded buffers and the result is bitwise `search()` in label space.
 
 With `DynamicConfig(precision=...)` the index keeps a quantized traversal
 tier next to the fp32 buffer (DESIGN.md §8): mutation-path distances stay
@@ -103,6 +110,16 @@ def _apply_seed_requests(ids, dists, new_slots, seed_ids, seed_d, *, r, cap):
         dist=seed_d.reshape(-1),
     )
     return P.insert_requests(P.Pool(ids, dists), req, cap=cap)
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def _write_seed_rows(ids, dists, new_slots, seed_ids, seed_d, *, r):
+    """The row-write half of `_apply_seed_requests`, split out so the
+    symmetric-edge half can route through the mesh
+    (`distributed.sharded_apply_requests`) on a mesh-constructed index —
+    the new rows themselves are a local scatter either way."""
+    row_i, row_d = ops.topr_merge(seed_ids, seed_d, r)
+    return ids.at[new_slots].set(row_i), dists.at[new_slots].set(row_d)
 
 
 @functools.partial(jax.jit, static_argnames=("pairs", "cap", "backend"))
@@ -182,7 +199,16 @@ class DynamicIndex:
                  cfg: DynamicConfig = DynamicConfig(),
                  key: jax.Array | None = None,
                  vertex_labels: jnp.ndarray | None = None,
-                 n_labels: int | None = None):
+                 n_labels: int | None = None,
+                 mesh=None, mesh_axes: tuple = ("data",)):
+        # `mesh`: optional device mesh for owner-shard mutation routing
+        # (DESIGN.md §11.3) — each insert batch's symmetric-edge staging
+        # runs through `distributed.sharded_apply_requests` over the
+        # vertex-sharded pools instead of the in-process staging.  Same
+        # order-free dataflow, so results are identical for any mesh
+        # (tests/test_corpus_shard.py); deletes are owner-local scatters
+        # and need no routing.  Power-of-two capacities keep the padded
+        # buffers divisible by any power-of-two shard count.
         n, d = x.shape
         assert pool.ids.shape[0] == n
         assert cfg.precision in VS.PRECISIONS, cfg.precision
@@ -194,6 +220,8 @@ class DynamicIndex:
         self.rounds_run = 0
         self._key = key if key is not None else jax.random.PRNGKey(0x0d11)
         self._entry: jnp.ndarray | None = None
+        self._mesh = mesh
+        self._mesh_axes = tuple(mesh_axes)
 
         cap = _pow2_capacity(n, cfg.min_capacity)
         self.x = jnp.zeros((cap, d), jnp.float32).at[:n].set(
@@ -422,9 +450,24 @@ class DynamicIndex:
         out_labels = self.labels[self.size:self.size + b].copy()
         self._next_label += b
 
-        self.pool = _apply_seed_requests(
-            self.pool.ids, self.pool.dists, new_slots,
-            seed_ids, seed_d, r=self.r, cap=cap)
+        if self._mesh is None:
+            self.pool = _apply_seed_requests(
+                self.pool.ids, self.pool.dists, new_slots,
+                seed_ids, seed_d, r=self.r, cap=cap)
+        else:
+            # owner-shard routing (DESIGN.md §11.3): same row writes, then
+            # the symmetric edges go through the mesh exchange — request
+            # destinations are global slot ids, each shard keeps its own
+            from repro.core import distributed as D
+            ids2, d2 = _write_seed_rows(
+                self.pool.ids, self.pool.dists, new_slots, seed_ids,
+                seed_d, r=self.r)
+            req = P.Requests(
+                dst=seed_ids.reshape(-1),
+                src=jnp.repeat(new_slots, seed_ids.shape[1]),
+                dist=seed_d.reshape(-1))
+            self.pool = D.sharded_apply_requests(
+                self._mesh, self._mesh_axes, P.Pool(ids2, d2), req, cap)
 
         # localized refinement: the frontier is the inserted vertices plus
         # every vertex that received a symmetric edge — a fixed-size vector
@@ -593,6 +636,43 @@ class DynamicIndex:
                      rescore=self.x if rescore else None,
                      labels=None if filter is None else self.label_words(),
                      filter=fwords, overfetch=overfetch)
+        ids = np.asarray(res.ids)
+        lab = np.where(ids >= 0, self.labels[np.clip(ids, 0, None)],
+                       np.int64(-1))
+        return SearchResult(jnp.asarray(lab), res.dists, res.n_expanded)
+
+    def corpus_search(self, queries: jnp.ndarray, n_shards: int, *,
+                      k: int = 10, ef: int = 64, max_steps: int = 512,
+                      visited: str = "dense", visited_cap: int | None = None,
+                      rescore: bool | None = None, filter=None,
+                      overfetch: int = 4, mesh=None,
+                      mesh_axes: tuple = ("data",)) -> SearchResult:
+        """Corpus-sharded search over this index (core/corpus_shard.py):
+        each shard owns 1/S of the padded buffers — vectors, graph rows,
+        validity, labels, rescore tier.  Bitwise `search()` in label space
+        for any shard count (the invariance tier), across insert, delete,
+        and compact — external-label stability is exactly label stability
+        of the underlying slot ids under the global→(shard, local) map.
+
+        Re-partitions the current buffers per call (tests/serving demos);
+        a production deployment would keep the sharded slices resident and
+        update them in place via the owner-routed mutation path.  `mesh`
+        runs the shard_map executor; None runs the in-process reference.
+        """
+        if rescore is None:
+            rescore = self.store is not None
+        from repro.core import corpus_shard as CS
+        idx = CS.shard(
+            self._tier(), self.pool.ids, n_shards,
+            valid=self.valid,
+            rescore=self.x if rescore else None,
+            labels=None if filter is None else self.label_words(),
+            entry=self.entry())
+        res = CS.sharded_search(
+            idx, queries, k=k, ef=ef, max_steps=max_steps, visited=visited,
+            visited_cap=visited_cap,
+            filter=None if filter is None else self._query_words(filter),
+            overfetch=overfetch, mesh=mesh, axes=mesh_axes)
         ids = np.asarray(res.ids)
         lab = np.where(ids >= 0, self.labels[np.clip(ids, 0, None)],
                        np.int64(-1))

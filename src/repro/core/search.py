@@ -29,7 +29,13 @@ The production pieces (DESIGN.md §6):
 
 Query sharding over a device mesh lives in `core.distributed.
 distributed_search` (x and graph replicated, queries sharded — searches are
-embarrassingly parallel over queries).
+embarrassingly parallel over queries).  CORPUS sharding — each device owns
+1/S of the vectors/graph/labels/rescore tier and this loop's per-step
+gathers become shard-local kernel calls plus order-free owner-combines —
+lives in `core.corpus_shard` (DESIGN.md §11); that module mirrors this
+loop line-for-line and is locked to it by a bitwise invariance tier
+(tests/test_corpus_shard.py), so semantic changes here must land there in
+the same commit.
 """
 from __future__ import annotations
 
@@ -120,6 +126,24 @@ def _table_insert(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
         return tab.at[qrows, ins].set(jnp.where(do, v, tab[qrows, ins]))
 
     return jax.lax.fori_loop(0, r, body, table)
+
+
+def _table_member(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Membership of (Q, R) ids in the (Q, H) open-addressed tables.
+
+    Exactly the fused kernel's visited probe (ref.search_expand_ref /
+    kernels/search_expand.py): the shared `visited_probe_positions` window,
+    any-slot id match.  Hoisted for callers that must probe OUTSIDE the
+    kernel — the corpus-sharded search (core/corpus_shard.py), where the
+    kernel sees shard-LOCAL row indices but the visited set is keyed by
+    GLOBAL ids — with bitwise-identical results by the kernel/oracle
+    parity contract.  Callers mask ids < 0 themselves (as the kernel's
+    `ok` mask does); this probe alone may report them either way.
+    """
+    q, h = table.shape
+    pos = visited_probe_positions(ids, h)                 # (Q, R, PL)
+    qrows = jnp.arange(q, dtype=jnp.int32)[:, None, None]
+    return jnp.any(table[qrows, pos] == ids[..., None], axis=-1)
 
 
 @functools.partial(

@@ -14,6 +14,17 @@ devices via `core.distributed.distributed_search` (bitwise-identical to
 the single-device search; on a CPU box force host devices first with
 XLA_FLAGS=--xla_force_host_platform_device_count=K).
 
+`--corpus-shards S` shards the CORPUS instead (core/corpus_shard.py,
+DESIGN.md §11): each shard owns 1/S of the vectors, graph rows, labels,
+and rescore tier — the layout that breaks the single-device memory
+ceiling on N.  Results are bitwise-identical to the replicated search for
+any S (the tests/test_corpus_shard.py invariance tier).  With at least S
+devices the shards map one-per-device over a mesh; with fewer, the
+in-process reference executor runs the identical math (useful for
+validation — the memory win needs real devices).  Mutually exclusive
+with `--shards` (one sharding axis per process; compose them via a 2-D
+mesh in a custom launcher) and `--mutable`.
+
 `--precision {fp32,bf16,int8}` selects the traversal-tier storage (the
 precision ladder, DESIGN.md §8): bf16 halves and int8 quarters the
 bytes/vector the bandwidth-bound expansion kernel reads.  At int8 the
@@ -81,6 +92,11 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard query batches over this many devices "
                          "(0 = single-device search)")
+    ap.add_argument("--corpus-shards", type=int, default=0,
+                    help="shard the CORPUS over this many partitions "
+                         "(core/corpus_shard.py; 0 = replicated).  One "
+                         "shard per device when enough devices exist, "
+                         "else the bitwise-identical in-process reference")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "bf16", "int8"],
                     help="traversal-tier vector storage (DESIGN.md §8); "
@@ -126,6 +142,13 @@ def main():
     if args.shards > 0 and args.mutable:
         ap.error("--mutable currently serves single-device (the mutation "
                  "path is not query-sharded); drop --shards")
+    if args.corpus_shards > 0 and args.shards > 0:
+        ap.error("--corpus-shards and --shards pick one sharding axis per "
+                 "process; compose them via a 2-D mesh in a custom launcher")
+    if args.corpus_shards > 0 and args.mutable:
+        ap.error("--mutable serves the replicated layout; use "
+                 "DynamicIndex.corpus_search for corpus-sharded mutation "
+                 "serving")
     if not args.mutable and (args.churn is not None
                              or args.refine_rounds is not None):
         ap.error("--churn/--refine-rounds only apply with --mutable")
@@ -172,6 +195,19 @@ def main():
         if words is not None:
             words = opt.vwords
 
+    cs_idx = cs_mesh = None
+    if args.corpus_shards > 0:
+        from repro.core import corpus_shard as CS
+        # partition AFTER the optional layout pass (the §11 composition
+        # contract: shards slice the permuted rows, ids_map restores the
+        # caller's numbering owner-side)
+        cs_idx = CS.shard(xt, ids, args.corpus_shards, rescore=rescore,
+                          labels=words, ids_map=ids_map, entry=entry)
+        if args.corpus_shards <= len(jax.devices()):
+            cs_mesh = jax.make_mesh(
+                (args.corpus_shards,), ("data",),
+                devices=jax.devices()[:args.corpus_shards])
+
     mesh = None
     if args.shards > 0:
         mesh = jax.make_mesh((args.shards,), ("data",),
@@ -189,6 +225,11 @@ def main():
             ids_map = jax.device_put(ids_map, rep)
 
     def run_batch(q, fwords):
+        if cs_idx is not None:
+            return cs_idx.search(
+                q, k=args.k, ef=ef, visited=args.visited,
+                visited_cap=args.visited_cap, filter=fwords,
+                mesh=cs_mesh)
         kw = dict(k=args.k, ef=ef, entry=entry, visited=args.visited,
                   visited_cap=args.visited_cap, rescore=rescore,
                   ids_map=ids_map)
@@ -234,7 +275,8 @@ def main():
           f"precision={args.precision}  bpv={bpv:.0f}  "
           f"rescore={int(rescore is not None)}  "
           f"opt_layout={args.optimize_layout or 'none'}  "
-          f"shards={max(args.shards, 1)}")
+          f"shards={max(args.shards, 1)}  "
+          f"corpus_shards={max(args.corpus_shards, 1)}")
 
 
 def _filter_setup(args, n: int):
@@ -341,7 +383,8 @@ def serve_mutable(args, x, dists, ids):
           f"rounds={idx.rounds_run}  "
           f"backend={ops.effective_backend()}  visited={args.visited}  "
           f"precision={args.precision}  "
-          f"opt_layout={args.optimize_layout or 'none'}  mutable=1")
+          f"opt_layout={args.optimize_layout or 'none'}  mutable=1  "
+          f"corpus_shards=1")
 
 
 if __name__ == "__main__":

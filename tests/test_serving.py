@@ -115,6 +115,42 @@ class TestServeCLI:
         rec = re.search(r"recall@10=([\d.]+)", line)
         assert rec and 0.0 <= float(rec.group(1)) <= 1.0, line
 
+    def test_corpus_sharded_serve_end_to_end(self, demo_index):
+        """ISSUE 7 e2e: `--corpus-shards 2` over a real subprocess with two
+        forced host devices — the stats line must carry the schema-5
+        `corpus_shards=` field and the sharded recall must clear the same
+        bar the replicated serve does (the search is bitwise-identical,
+        so any gap would be an artifact-format or wiring bug)."""
+        out, env = demo_index
+        env2 = dict(env)
+        env2["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--index", out,
+             "--batches", "2", "--batch-size", "48", "--ef", "32",
+             "--backend", "ref", "--corpus-shards", "2"],
+            env=env2, capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        line = [ln for ln in proc.stdout.splitlines() if "qps=" in ln][-1]
+        assert "corpus_shards=2" in line, line
+        rec = re.search(r"recall@10=([\d.]+)", line)
+        assert rec is not None, line
+        assert float(rec.group(1)) >= 0.85, line
+        # validated by the benchmarks/run.py schema-5 field contract
+        from benchmarks.run import _CS_RE
+        m = _CS_RE.search(line)
+        assert m and int(m.group(1)) == 2, line
+
+    def test_corpus_shards_with_query_shards_is_rejected(self, demo_index):
+        out, env = demo_index
+        env2 = dict(env)
+        env2["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--index", out,
+             "--corpus-shards", "2", "--shards", "2"],
+            env=env2, capture_output=True, text=True, timeout=120)
+        assert proc.returncode != 0
+        assert "--corpus-shards" in proc.stderr
+
     def test_selectivity_without_filter_is_rejected(self, demo_index):
         out, env = demo_index
         proc = subprocess.run(
