@@ -1,0 +1,213 @@
+"""Fig 14 (beyond the paper): serving-engine latency vs offered load.
+
+The paper's figures measure throughput on closed-loop fixed batches; a
+serving deployment sees an open-loop stream of small heterogeneous
+requests, and the number that matters is tail latency as the offered
+load approaches the engine's capacity.  This sweep drives the
+continuous-batching engine (`serve/ann_engine.py`, DESIGN.md §12) with a
+Poisson trace of mixed-(k, ef) requests at a ladder of offered-QPS
+fractions of the measured closed-loop capacity, and reports nearest-rank
+p50/p99 per-request latency, achieved QPS, mean batch occupancy, and the
+compiled-bucket count per load point.
+
+Row names are `fig14/<dataset>/load<pct><backend-tag>`; every row
+carries the schema-validated `p50_ms=`/`p99_ms=`/`qps=` fields
+(benchmarks/run.py SMOKE_SCHEMA 6) plus `offered_qps=`/`capacity_qps=`
+for the load story.
+
+    PYTHONPATH=src python benchmarks/fig14_serving.py [--backend ref]
+    PYTHONPATH=src python benchmarks/fig14_serving.py --smoke
+
+`--smoke` is the acceptance gate: a tiny interpret-mode sweep whose rows
+are parsed and validated in-process — at least two load points per
+dataset, every request completed, p50 <= p99, achieved QPS positive —
+non-zero exit on any violation.  Latency MAGNITUDES are not gated (CI
+wall clocks are noisy); the contract is the reporting surface.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import re
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig14_serving.py`
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import grnnd, recall as R
+from repro.serve import ann_engine as AE
+
+SMOKE_N = 192
+K_CHOICES = (5, 10)
+LOAD_FRACS = (0.25, 0.5, 1.0)
+
+_P50_RE = re.compile(r"(?:^|\s)p50_ms=(\S+)")
+_P99_RE = re.compile(r"(?:^|\s)p99_ms=(\S+)")
+_QPS_RE = re.compile(r"(?:^|\s)qps=(\S+)")
+_OFFERED_RE = re.compile(r"(?:^|\s)offered_qps=(\S+)")
+_COMPLETED_RE = re.compile(r"(?:^|\s)completed=(\S+)")
+
+
+def _warm_buckets(worker, cfg, q, ef_choices) -> None:
+    """Compile every (Q bucket, ef) trace the engine can emit for this
+    config, so measured replays see warm jit caches in every bucket (the
+    engine's own warm-up would only touch the shapes one load level
+    happens to produce)."""
+    for ef in ef_choices:
+        k_exec = min(cfg.k_cap, ef)
+        qb = 1
+        while qb <= cfg.max_batch:
+            worker.search_batch(np.repeat(q[:1], qb, axis=0), k=k_exec,
+                                ef=ef, fwords=None)
+            qb *= 2
+
+
+def run(n: int = 3000, backend: str | None = None,
+        load_fracs=LOAD_FRACS) -> list[str]:
+    """`backend` applies to the engine's search path; recall is scored
+    against exact fp32 brute force (from bench_datasets)."""
+    eff, tag = C.resolve_backend(backend)
+    interp = eff == "interpret"
+    if interp:
+        n = min(n, C.INTERPRET_MAX_N)
+        load_fracs = tuple(load_fracs)[-2:]  # two points bound the smoke
+    requests = 48 if interp else 256
+    ef_choices = (C.EF,) if interp else (32, 64)
+    max_batch = 8 if interp else 32
+    # interpret: the fast-tier build shape (Python-stepped kernel grids);
+    # full scale: the fig6/fig13 build shape
+    cfg_b = (grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16)
+             if interp else
+             grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                               pairs_per_vertex=24))
+    ecfg = AE.EngineConfig(max_batch=max_batch,
+                           ef_menu=tuple(sorted(set(ef_choices))))
+
+    rows = []
+    datasets = list(C.bench_datasets(n=n, nq=requests).items())
+    if interp:
+        datasets = datasets[:1]  # same smoke-budget rationale as fig12/13
+    for name, (x, q, gt) in datasets:
+        qn = np.asarray(q, np.float32)
+        gtn = np.asarray(gt)
+        with C.backend_scope(backend):
+            pool, _ = C.timed_build(x, cfg_b)
+            worker = AE.StaticWorker(x, pool.ids)
+            _warm_buckets(worker, ecfg, qn, ef_choices)
+            eng = AE.AnnEngine(worker, ecfg)
+
+            # closed-loop capacity probe: everything arrives at t~0, the
+            # drain rate is the ceiling the load ladder is scaled from
+            def make_trace(offered):
+                return AE.synth_trace(np.random.default_rng(3), qn,
+                                      offered_qps=offered,
+                                      k_choices=K_CHOICES,
+                                      ef_choices=ef_choices)
+            probe = AE.replay(eng, [dataclasses.replace(ev, t=0.0)
+                                    for ev in make_trace(1.0)])
+            for rid in probe.values():
+                eng.take_result(rid)
+            capacity = max(eng.stats().qps, 1.0)
+
+            for frac in load_fracs:
+                eng.reset_stats()
+                offered = frac * capacity
+                trace = make_trace(offered)
+                rids = AE.replay(eng, trace)
+                s = eng.stats()
+                recs = []
+                for i, rid in rids.items():
+                    res = eng.take_result(rid)
+                    recs.append(R.recall_at_k(
+                        res.ids[None], gtn[i, : trace[i].k][None]))
+                rec = sum(recs) / max(len(recs), 1)
+                rows.append(C.row(
+                    f"fig14/{name}/load{int(round(frac * 100))}{tag}",
+                    s.p50_ms * 1e-3,
+                    f"p50_ms={s.p50_ms:.2f} p99_ms={s.p99_ms:.2f} "
+                    f"qps={s.qps:.1f} offered_qps={offered:.1f} "
+                    f"capacity_qps={capacity:.1f} "
+                    f"occupancy={s.mean_occupancy:.2f} "
+                    f"buckets={s.n_buckets} completed={s.n_completed} "
+                    f"rejected={s.n_rejected} recall={rec:.3f} "
+                    f"backend={eff}",
+                    bytes_per_vector=C.fp32_bpv(x)))
+    return rows
+
+
+def validate_serving_rows(parsed: list[dict]) -> None:
+    """The fig14 acceptance gate (shared with benchmarks/run.py).
+
+    Raises ValueError unless every fig14 row carries the SMOKE_SCHEMA 6
+    reporting surface — parseable `p50_ms=`/`p99_ms=`/`qps=` with
+    p50 <= p99 and achieved QPS positive — every admitted request
+    completed, and each dataset covers at least two load points.
+    Latency magnitudes are deliberately NOT gated (wall-clock noise).
+    """
+    fig14 = [p for p in parsed if p["name"].startswith("fig14/")]
+    if not fig14:
+        raise ValueError("no fig14 rows to validate")
+    seen: dict[str, set] = {}
+    for p in fig14:
+        ds, cell = p["name"].split("/")[1:3]
+        seen.setdefault(ds, set()).add(cell)
+        vals = {}
+        for field, rx in (("p50_ms", _P50_RE), ("p99_ms", _P99_RE),
+                          ("qps", _QPS_RE), ("offered_qps", _OFFERED_RE),
+                          ("completed", _COMPLETED_RE)):
+            m = rx.search(p["derived"])
+            if not m:
+                raise ValueError(f"fig14 row lacks {field}=: {p['name']}")
+            vals[field] = float(m.group(1))
+        if vals["p50_ms"] < 0 or vals["p99_ms"] < vals["p50_ms"]:
+            raise ValueError(
+                f"{p['name']}: p50/p99 out of order "
+                f"({vals['p50_ms']} / {vals['p99_ms']})")
+        if vals["qps"] <= 0 or vals["offered_qps"] <= 0:
+            raise ValueError(f"{p['name']}: non-positive QPS")
+        if vals["completed"] < 1:
+            raise ValueError(f"{p['name']}: no request completed")
+    for ds, cells in seen.items():
+        if len(cells) < 2:
+            raise ValueError(
+                f"fig14/{ds} must cover at least two load points; "
+                f"got {sorted(cells)}")
+
+
+def smoke() -> None:
+    """Tiny interpret-mode sweep + in-process contract validation."""
+    from benchmarks.run import parse_row
+    rows = run(n=SMOKE_N, backend="interpret")
+    for r in rows:
+        print(r, flush=True)
+    validate_serving_rows([parse_row(r) for r in rows])
+    print("# fig14 smoke: latency/QPS reporting contract OK",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for the engine's search path "
+                         "(default: current REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--n", type=int, default=3000,
+                    help="vectors per dataset (interpret runs are capped "
+                         f"at {C.INTERPRET_MAX_N})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode sweep, self-validating "
+                         "(non-zero exit on reporting-contract violations)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        for row in run(n=args.n, backend=args.backend):
+            print(row, flush=True)
+        print(f"# fig14 done in {time.time() - t0:.1f}s", file=sys.stderr)

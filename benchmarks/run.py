@@ -14,6 +14,7 @@ silently corrupting the trajectory.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5 roofline]
     PYTHONPATH=src python -m benchmarks.run --smoke --out BENCH_smoke.json
+    PYTHONPATH=src python -m benchmarks.run --check BENCH_smoke.json
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ import sys
 import time
 
 ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-       "fig13", "roofline")
+       "fig13", "fig14", "roofline")
 
 # the artifact contract: bump ONLY with a matching update to every consumer
 # of the perf trajectory (EXPERIMENTS.md §Tables tooling)
@@ -43,7 +44,15 @@ ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
 # core/corpus_shard.py) — required on every fig13 row, and the fig13
 # validator gates the recall floor plus per-shard memory < replicated
 # wherever S > 1 (the N-ceiling claim, ISSUE 7)
-SMOKE_SCHEMA = 5
+# schema 6: serving rows (fig14, serve/ann_engine.py) carry
+# `p50_ms=`/`p99_ms=`/`qps=` (nearest-rank per-request latency + achieved
+# throughput) — required on every fig14 row by the fig14 validator; the
+# family gate now also requires at least one SUCCESSFUL row per family
+# (a family that silently stops emitting rows fails, not just schema
+# drift), and `--check FILE` re-validates an existing artifact so CI can
+# gate the uploaded file independently of the process that wrote it
+# (ISSUE 8)
+SMOKE_SCHEMA = 6
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
 _PRECISIONS = ("fp32", "bf16", "int8")
@@ -52,9 +61,12 @@ _BPV_RE = re.compile(r"(?:^|\s)bpv=(\S+)")
 _SEL_RE = re.compile(r"(?:^|\s)selectivity=(\S+)")
 _OPT_RE = re.compile(r"(?:^|\s)opt_layout=([\w.-]+)")
 _CS_RE = re.compile(r"(?:^|\s)corpus_shards=(\S+)")
+_P50_RE = re.compile(r"(?:^|\s)p50_ms=(\S+)")
+_P99_RE = re.compile(r"(?:^|\s)p99_ms=(\S+)")
+_QPS_RE = re.compile(r"(?:^|\s)qps=(\S+)")
 # families the smoke artifact must always cover (one per serving surface)
 SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "fig13",
-                  "roofline")
+                  "fig14", "roofline")
 
 
 def _module(name: str):
@@ -76,6 +88,8 @@ def _module(name: str):
         from benchmarks import fig12_filtered as m
     elif name == "fig13":
         from benchmarks import fig13_corpus_sharded as m
+    elif name == "fig14":
+        from benchmarks import fig14_serving as m
     elif name == "roofline":
         from benchmarks import roofline as m
     else:
@@ -103,6 +117,11 @@ def parse_row(row: str) -> dict:
     core/corpus_shard.py) is lifted; where present it must parse as an
     int >= 1.  The fig13 validator additionally REQUIRES it on every
     fig13 row and gates recall + the per-shard memory reduction.
+
+    Schema 6: optional `p50_ms=`/`p99_ms=`/`qps=` (serving rows,
+    serve/ann_engine.py) are lifted; where present they must parse as
+    non-negative floats.  The fig14 validator additionally REQUIRES all
+    three on every fig14 row and gates p50 <= p99 + completion.
     """
     parts = row.split(",", 2)
     if len(parts) != 3:
@@ -133,21 +152,36 @@ def parse_row(row: str) -> dict:
         cs_val = int(cs.group(1))
         if cs_val < 1:
             raise ValueError(f"corpus_shards below 1: {row!r}")
+    serving = {}
+    for field, rx in (("p50_ms", _P50_RE), ("p99_ms", _P99_RE),
+                      ("qps", _QPS_RE)):
+        m = rx.search(derived)
+        serving[field] = None
+        if m:
+            serving[field] = float(m.group(1))
+            if serving[field] < 0:
+                raise ValueError(f"negative {field}: {row!r}")
     return {"name": name, "us_per_call": float(us), "derived": derived,
             "precision": prec.group(1), "bytes_per_vector": bpv_val,
             "selectivity": sel_val,
             "opt_layout": opt.group(1) if opt else None,
-            "corpus_shards": cs_val}
+            "corpus_shards": cs_val, **serving}
 
 
 def validate_rows(parsed: list[dict]) -> None:
-    """Schema gate for the smoke artifact: every family present, no ERROR
-    rows (a crashed benchmark must fail CI, not upload a hole), and the
-    fig11 precision ladder covering all rungs at the mandated bytes/vector
-    reductions."""
+    """Schema gate for the smoke artifact: every family present WITH at
+    least one successful row (a family that silently stops emitting rows
+    must fail, not just one that crashes), no ERROR rows (a crashed
+    benchmark must fail CI, not upload a hole), and the per-family
+    validators (fig6 layout, fig11 precision ladder, fig12 filtered,
+    fig13 corpus-sharded, fig14 serving)."""
     for fam in SMOKE_FAMILIES:
-        if not any(p["name"].startswith(fam + "/") for p in parsed):
-            raise ValueError(f"smoke artifact is missing family {fam!r}")
+        ok = [p for p in parsed
+              if p["name"].startswith(fam + "/")
+              and "/ERROR" not in p["name"]]
+        if not ok:
+            raise ValueError(
+                f"smoke artifact has no successful {fam!r} rows")
     errors = [p["name"] for p in parsed if "/ERROR" in p["name"]]
     if errors:
         raise ValueError(f"benchmark families crashed: {errors}")
@@ -155,10 +189,12 @@ def validate_rows(parsed: list[dict]) -> None:
     from benchmarks.fig11_precision import validate_precision_rows
     from benchmarks.fig12_filtered import validate_filtered_rows
     from benchmarks.fig13_corpus_sharded import validate_corpus_rows
+    from benchmarks.fig14_serving import validate_serving_rows
     validate_layout_rows(parsed)
     validate_precision_rows(parsed)
     validate_filtered_rows(parsed)
     validate_corpus_rows(parsed)
+    validate_serving_rows(parsed)
 
 
 def run_smoke(out_path: str) -> None:
@@ -172,6 +208,7 @@ def run_smoke(out_path: str) -> None:
         ("fig11", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig12", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig13", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig14", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("roofline", lambda m: m.run()),
     )
     for name, call in calls:
@@ -194,6 +231,29 @@ def run_smoke(out_path: str) -> None:
     validate_rows(parsed)  # raises (non-zero exit) on drift
 
 
+def check_artifact(path: str) -> None:
+    """Re-validate an EXISTING smoke artifact from disk: schema version,
+    row contract, and family completeness.  This is the CI gate run as a
+    separate step from the process that wrote the file — `run_smoke`'s
+    in-process validation cannot catch an artifact that was uploaded
+    stale, truncated, or from a diverged writer."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != SMOKE_SCHEMA:
+        raise ValueError(f"{path}: schema {payload.get('schema')!r} != "
+                         f"expected {SMOKE_SCHEMA}")
+    rows = payload.get("rows", [])
+    if not rows:
+        raise ValueError(f"{path}: artifact has no rows")
+    # re-parse from the raw columns, not the stored lifted fields: the
+    # artifact must revalidate from first principles
+    parsed = [parse_row(f"{p['name']},{p['us_per_call']},{p['derived']}")
+              for p in rows]
+    validate_rows(parsed)
+    print(f"# {path}: schema {SMOKE_SCHEMA}, {len(parsed)} rows, "
+          f"all {len(SMOKE_FAMILIES)} families present", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
@@ -203,8 +263,17 @@ def main() -> None:
                          "(the CI perf-trajectory seed)")
     ap.add_argument("--out", default="BENCH_smoke.json",
                     help="smoke artifact path (only with --smoke)")
+    ap.add_argument("--check", default=None, metavar="FILE",
+                    help="re-validate an existing smoke artifact (schema "
+                         "+ family completeness) and exit; the CI gate "
+                         "step (runs nothing)")
     args = ap.parse_args()
 
+    if args.check:
+        if args.smoke or args.only:
+            ap.error("--check runs nothing; drop --smoke/--only")
+        check_artifact(args.check)
+        return
     if args.smoke:
         if args.only:
             ap.error("--only does not apply to --smoke (fixed family set)")

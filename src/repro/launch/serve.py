@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve --index /tmp/sift.idx.npz \
         [--batches 8] [--ef 48] [--backend pallas] [--visited hashed] \
         [--visited-cap 512] [--shards 4] [--precision int8] \
-        [--mutable --churn 64] [--filter-labels 100 --selectivity 0.1]
+        [--mutable --churn 64] [--filter-labels 100 --selectivity 0.1] \
+        [--engine --requests 256 --offered-qps 500 --mix-k 5,10]
 
 `--backend` selects the kernel path of the fused expansion step
 (`kernels/search_expand.py`; off-TPU "pallas" degrades to interpret mode).
@@ -42,6 +43,18 @@ automatically raised to the over-fetch floor ~4·k/selectivity (§9.3) —
 the printed `ef=` field shows the effective value.  Composes with
 `--shards` (predicates shard with the queries) and `--mutable` (labels
 ride through insert/delete/compact).
+
+`--engine` replaces the fixed-batch loop with the continuous-batching
+engine (`serve/ann_engine.py`, DESIGN.md §12): a synthetic open-loop
+trace of small heterogeneous requests — k/ef drawn per request from
+`--mix-k`/`--mix-ef`, every other request filtered under
+`--filter-labels`, insert/delete churn every `--churn-every` queries
+under `--mutable` — is coalesced into jit-bucketed `(Q, ef, filtered?)`
+batches.  Results are bitwise-identical to the direct path
+(tests/test_ann_engine.py); the report adds p50/p99 per-request latency,
+achieved vs offered QPS, batch occupancy, and the compiled-bucket count.
+Composes with `--precision`, `--optimize-layout`, `--corpus-shards`, and
+`--mutable` (but not `--shards`: the engine shapes its own batches).
 
 `--mutable` wraps the loaded index in a `core.dynamic.DynamicIndex` and
 interleaves mutation requests with the query batches: every batch first
@@ -130,6 +143,37 @@ def main():
     ap.add_argument("--selectivity", type=float, default=None,
                     help="fraction of the label space each query predicate "
                          "allows (only with --filter-labels; default 0.1)")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine serving (serve/"
+                         "ann_engine.py, DESIGN.md §12): a trace-driven "
+                         "stream of small requests with mixed k/ef/filter "
+                         "(plus insert/delete churn under --mutable) is "
+                         "coalesced into jit-bucketed batches; reports "
+                         "p50/p99 latency, QPS, occupancy, bucket count")
+    ap.add_argument("--offered-qps", type=float, default=None,
+                    help="trace arrival rate (only with --engine; default: "
+                         "auto-calibrate to the measured batch capacity)")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="trace length in queries (only with --engine)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="trace RNG seed (only with --engine)")
+    ap.add_argument("--mix-k", default="5,10",
+                    help="comma-separated k menu the trace draws from "
+                         "(only with --engine)")
+    ap.add_argument("--mix-ef", default=None,
+                    help="comma-separated ef menu the trace draws from "
+                         "(only with --engine; default: just --ef)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="engine batch-size ceiling (only with --engine)")
+    ap.add_argument("--quantum", type=int, default=4,
+                    help="query batches per mutation drain when both "
+                         "queues are backed up (only with --engine)")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="admission-control queue bound (only with "
+                         "--engine; excess requests are shed and counted)")
+    ap.add_argument("--churn-every", type=int, default=32,
+                    help="queries between churn events in the trace (only "
+                         "with --engine --mutable)")
     args = ap.parse_args()
 
     if args.visited_cap is not None and args.visited != "hashed":
@@ -160,6 +204,14 @@ def main():
     if args.filter_labels and not (args.selectivity is None
                                    or 0 < args.selectivity <= 1):
         ap.error("--selectivity must be in (0, 1]")
+    if args.engine and args.shards > 0:
+        ap.error("--engine shapes its own batches; query-sharding a "
+                 "dynamic batch needs a custom worker (drop --shards)")
+    if not args.engine and (args.offered_qps is not None
+                            or args.mix_ef is not None):
+        ap.error("--offered-qps/--mix-ef only apply with --engine")
+    if args.engine and args.mutable and args.corpus_shards > 0:
+        ap.error("--engine --mutable serves the replicated layout")
 
     if args.backend is not None:
         ops.set_backend(args.backend)
@@ -168,45 +220,15 @@ def main():
     x = jnp.asarray(blob["x"])
     ids = jnp.asarray(blob["ids"])
 
+    if args.engine:
+        serve_engine(args, x, blob, ids)
+        return
     if args.mutable:
         serve_mutable(args, x, jnp.asarray(blob["dists"]), ids)
         return
 
-    # the precision ladder (DESIGN.md §8): traversal reads the compact
-    # tier; the fp32 array stays around only as the rescoring tier
-    store = vecstore.encode(x, args.precision)
-    xt = x if args.precision == "fp32" else store
-    rescore = x if (args.precision != "fp32" and not args.no_rescore) else None
-    bpv = store.bytes_per_vector()
-    entry = medoid(xt)
-
-    lstore, sel, ef = _filter_setup(args, x.shape[0])
-
-    words = None if lstore is None else lstore.words
-    ids_map = None
-    if args.optimize_layout:
-        # the post-build layout pass (DESIGN.md §10): every index-side
-        # operand is permuted together and `ids_map` restores original
-        # numbering on the way out, so gt scoring below is untouched
-        opt = layout.optimize(xt, ids, order=args.optimize_layout,
-                              rescore=rescore, labels=words, entry=entry)
-        xt, ids, entry, rescore = opt.x, opt.graph_ids, opt.entry, opt.rescore
-        ids_map = opt.inv
-        if words is not None:
-            words = opt.vwords
-
-    cs_idx = cs_mesh = None
-    if args.corpus_shards > 0:
-        from repro.core import corpus_shard as CS
-        # partition AFTER the optional layout pass (the §11 composition
-        # contract: shards slice the permuted rows, ids_map restores the
-        # caller's numbering owner-side)
-        cs_idx = CS.shard(xt, ids, args.corpus_shards, rescore=rescore,
-                          labels=words, ids_map=ids_map, entry=entry)
-        if args.corpus_shards <= len(jax.devices()):
-            cs_mesh = jax.make_mesh(
-                (args.corpus_shards,), ("data",),
-                devices=jax.devices()[:args.corpus_shards])
+    (xt, ids, entry, rescore, bpv, lstore, sel, ef, words, ids_map,
+     cs_idx, cs_mesh) = _static_setup(args, x, ids)
 
     mesh = None
     if args.shards > 0:
@@ -277,6 +299,188 @@ def main():
           f"opt_layout={args.optimize_layout or 'none'}  "
           f"shards={max(args.shards, 1)}  "
           f"corpus_shards={max(args.corpus_shards, 1)}")
+
+
+def serve_engine(args, x, blob, ids):
+    """--engine: continuous-batching serving (serve/ann_engine.py, §12).
+
+    A synthetic open-loop trace (Poisson arrivals, per-request k/ef drawn
+    from --mix-k/--mix-ef, with --filter-labels every other request carries
+    a predicate, with --mutable a churn pair lands every --churn-every
+    queries) is replayed against the engine.  A closed-loop warm-up replay
+    first compiles the jit buckets and measures capacity (the default
+    --offered-qps is 70% of it); the measured replay then reports
+    p50/p99 latency, QPS, occupancy, and the bucket-trace count.
+    """
+    import dataclasses
+
+    from repro.serve import ann_engine as AE
+
+    k_choices = [int(s) for s in args.mix_k.split(",") if s.strip()]
+    ef_choices = ([int(s) for s in args.mix_ef.split(",") if s.strip()]
+                  if args.mix_ef else [args.ef])
+    cfg = AE.EngineConfig(max_pending=args.max_pending,
+                          max_batch=args.max_batch,
+                          query_quantum=args.quantum,
+                          ef_menu=tuple(sorted(set(ef_choices))))
+    if max(k_choices) > min(cfg.k_cap, min(ef_choices)):
+        raise SystemExit(f"--mix-k max {max(k_choices)} exceeds "
+                         f"min(k_cap={cfg.k_cap}, ef={min(ef_choices)})")
+
+    kq = jax.random.PRNGKey(9000 + args.trace_seed)
+    q = np.asarray(synthetic.queries_from(kq, x, args.requests))
+
+    # build the worker for the requested serving configuration
+    mut_every, churn_vecs, churn_labs = 0, None, None
+    if args.mutable:
+        lstore, sel, _ = _filter_setup(args, x.shape[0])
+        rounds = args.refine_rounds if args.refine_rounds is not None else 2
+        idx = DynamicIndex(x, Pool(ids, jnp.asarray(blob["dists"])),
+                           DynamicConfig(refine_rounds=rounds,
+                                         precision=args.precision,
+                                         layout=args.optimize_layout),
+                           vertex_labels=(None if lstore is None
+                                          else lstore.labels),
+                           n_labels=(args.filter_labels
+                                     if lstore is not None else None))
+        worker = AE.DynamicWorker(idx, visited=args.visited,
+                                  visited_cap=args.visited_cap)
+        churn = args.churn if args.churn is not None else 16
+        mut_every = args.churn_every
+        n_churn = max(1, args.requests // max(mut_every, 1))
+        churn_vecs = [np.asarray(synthetic.queries_from(
+            jax.random.fold_in(kq, 100 + i), x, churn, noise=0.1))
+            for i in range(n_churn)]
+        if lstore is not None:
+            churn_labs = [np.asarray(jax.random.randint(
+                jax.random.fold_in(kq, 200 + i), (churn,), 0,
+                args.filter_labels), np.int32) for i in range(n_churn)]
+    else:
+        (xt, gids, entry, rescore, _bpv, lstore, sel, _ef, words, ids_map,
+         cs_idx, cs_mesh) = _static_setup(args, x, ids)
+        if cs_idx is not None:
+            worker = AE.ShardedWorker(cs_idx, mesh=cs_mesh,
+                                      visited=args.visited,
+                                      visited_cap=args.visited_cap)
+        else:
+            worker = AE.StaticWorker(xt, gids, entry=entry,
+                                     visited=args.visited,
+                                     visited_cap=args.visited_cap,
+                                     rescore=rescore, labels=words,
+                                     ids_map=ids_map)
+
+    # every other request filtered (a mixed-predicate stream), the rest plain
+    fwords = None
+    if lstore is not None:
+        fw = np.asarray(lab.random_query_filters(
+            jax.random.fold_in(kq, 7), args.requests, args.filter_labels,
+            sel))
+        fwords = [fw[i] if i % 2 == 0 else None
+                  for i in range(args.requests)]
+
+    def make_trace(offered):
+        rng = np.random.default_rng(args.trace_seed)
+        return AE.synth_trace(rng, q, offered_qps=offered,
+                              k_choices=k_choices, ef_choices=ef_choices,
+                              fwords=fwords, mutation_every=mut_every,
+                              churn_vectors=churn_vecs,
+                              churn_labels=churn_labs)
+
+    eng = AE.AnnEngine(worker, cfg)
+
+    # closed-loop warm-up: everything arrives at t~0, so the big buckets
+    # compile here and the drain rate measures the engine's capacity
+    warm_rids = AE.replay(eng, [dataclasses.replace(ev, t=0.0)
+                                for ev in make_trace(1.0)])
+    for rid in warm_rids.values():
+        eng.take_result(rid)
+    capacity = max(eng.stats().qps, 1.0)
+    eng.reset_stats()
+
+    offered = (args.offered_qps if args.offered_qps is not None
+               else 0.7 * capacity)
+    trace = make_trace(offered)
+    rids = AE.replay(eng, trace)
+    s = eng.stats()
+
+    extra = ""
+    if args.mutable:
+        extra = (f"mutations/s={s.mutations_per_sec:.0f}  "
+                 f"live={idx.n_live}  ")
+    else:
+        # recall + the filtered hard invariant, per admitted request
+        row_of = {ti: j for j, ti in enumerate(
+            i for i, ev in enumerate(trace) if ev.kind == "query")}
+        kmax = max(k_choices)
+        gt_plain = np.asarray(brute_force_knn(x, jnp.asarray(q), kmax))
+        recs, preds = [], []
+        for ti, rid in rids.items():
+            ev, res = trace[ti], eng.take_result(rid)
+            if ev.fwords is None:
+                recs.append(recall_at_k(res.ids[None],
+                                        gt_plain[row_of[ti], :ev.k][None]))
+            else:
+                fwr = jnp.asarray(ev.fwords)[None]
+                gt = lab.filtered_brute_force(x, jnp.asarray(q[row_of[ti]])[None],
+                                              fwr, lstore.words, ev.k)
+                recs.append(lab.filtered_recall_at_k(res.ids[None], gt))
+                preds.append(lab.predicate_fraction(
+                    jnp.asarray(res.ids)[None], fwr, lstore.words))
+        extra = f"recall={sum(recs) / max(len(recs), 1):.3f}  "
+        if preds:
+            extra += f"pred_ok={sum(preds) / len(preds):.3f}  "
+
+    print(f"engine=1  qps={s.qps:.0f}  offered={offered:.0f}  "
+          f"p50={s.p50_ms:.1f}ms  p99={s.p99_ms:.1f}ms  "
+          f"occupancy={s.mean_occupancy:.2f}  buckets={s.n_buckets}  "
+          f"completed={s.n_completed}  rejected={s.n_rejected}  {extra}"
+          f"backend={ops.effective_backend()}  visited={args.visited}  "
+          f"precision={args.precision}  mutable={int(args.mutable)}  "
+          f"corpus_shards={max(args.corpus_shards, 1)}")
+
+
+def _static_setup(args, x, ids):
+    """The frozen-index serving operands, shared by the fixed-batch path
+    and the engine's StaticWorker/ShardedWorker: precision tier (§8),
+    filtered-serving labels (§9), optional layout pass (§10), optional
+    corpus sharding (§11)."""
+    # the precision ladder (DESIGN.md §8): traversal reads the compact
+    # tier; the fp32 array stays around only as the rescoring tier
+    store = vecstore.encode(x, args.precision)
+    xt = x if args.precision == "fp32" else store
+    rescore = x if (args.precision != "fp32" and not args.no_rescore) else None
+    bpv = store.bytes_per_vector()
+    entry = medoid(xt)
+
+    lstore, sel, ef = _filter_setup(args, x.shape[0])
+
+    words = None if lstore is None else lstore.words
+    ids_map = None
+    if args.optimize_layout:
+        # the post-build layout pass (DESIGN.md §10): every index-side
+        # operand is permuted together and `ids_map` restores original
+        # numbering on the way out, so gt scoring below is untouched
+        opt = layout.optimize(xt, ids, order=args.optimize_layout,
+                              rescore=rescore, labels=words, entry=entry)
+        xt, ids, entry, rescore = opt.x, opt.graph_ids, opt.entry, opt.rescore
+        ids_map = opt.inv
+        if words is not None:
+            words = opt.vwords
+
+    cs_idx = cs_mesh = None
+    if args.corpus_shards > 0:
+        from repro.core import corpus_shard as CS
+        # partition AFTER the optional layout pass (the §11 composition
+        # contract: shards slice the permuted rows, ids_map restores the
+        # caller's numbering owner-side)
+        cs_idx = CS.shard(xt, ids, args.corpus_shards, rescore=rescore,
+                          labels=words, ids_map=ids_map, entry=entry)
+        if args.corpus_shards <= len(jax.devices()):
+            cs_mesh = jax.make_mesh(
+                (args.corpus_shards,), ("data",),
+                devices=jax.devices()[:args.corpus_shards])
+    return (xt, ids, entry, rescore, bpv, lstore, sel, ef, words, ids_map,
+            cs_idx, cs_mesh)
 
 
 def _filter_setup(args, n: int):

@@ -54,6 +54,11 @@ from repro.data import synthetic
 from repro.kernels import ops
 from conftest import optional_hypothesis
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 given, settings, st = optional_hypothesis()
 
 K = 10

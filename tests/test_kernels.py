@@ -16,6 +16,11 @@ from repro.kernels import ref
 from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas, rowwise_sqdist_pallas
 from repro.kernels.topr_merge import topr_merge_pallas
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 
 @pytest.mark.parametrize("m,n,d", [
     (4, 4, 8), (17, 33, 12), (128, 128, 128), (130, 70, 200),

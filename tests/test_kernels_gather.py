@@ -7,6 +7,11 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.gather_l2 import gather_sqdist_pallas
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 
 @pytest.mark.parametrize("n,d,m", [(64, 8, 16), (200, 128, 64), (50, 33, 7)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

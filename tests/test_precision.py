@@ -37,6 +37,11 @@ from repro.kernels.pairwise_l2 import pairwise_sqdist_pallas
 from repro.kernels.rng_round import rng_round_pallas
 from repro.kernels.search_expand import search_expand_pallas
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 PRECS = ("bf16", "int8")
 
 

@@ -12,6 +12,11 @@ from repro.core.search import search
 from repro.data import synthetic
 from repro.kernels import ops
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 
 @settings(deadline=None, max_examples=10)
 @given(

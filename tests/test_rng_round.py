@@ -19,6 +19,11 @@ from repro.data import synthetic
 from repro.kernels import ops, ref
 from repro.kernels.rng_round import rng_round_pallas
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 
 def _pool_and_pairs(seed, n, d, r, p, s=None):
     x = synthetic.vector_dataset(jax.random.PRNGKey(seed), n, d,

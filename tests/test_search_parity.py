@@ -24,6 +24,11 @@ from repro.kernels import ops, ref
 from repro.kernels.search_expand import search_expand_pallas
 from conftest import optional_hypothesis
 
+# every suite in the interpret CI leg carries this marker: the
+# matrix selects `-m kernel_parity` instead of a hand-kept file list
+pytestmark = pytest.mark.kernel_parity
+
+
 given, settings, st = optional_hypothesis()
 
 
