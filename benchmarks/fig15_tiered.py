@@ -1,0 +1,189 @@
+"""Fig 15 (beyond the paper): tiered vector storage — device-hot
+traversal, host-cold fp32 rescore (DESIGN.md §13).
+
+The precision ladder (fig11) cut traversal-tier bytes/vector 4x, but the
+fp32 rescore tier still sat in device memory — N·D·4 bytes that the
+search touches only ef rows of per query.  `--tier host` pins that tier
+on the CPU backend (`vecstore.HostTier`): device memory holds the
+quantized tier + graph only, and the re-rank gathers ef·D fp32 bytes per
+query across the host boundary.  This sweep measures both sides of the
+placement trade, per quantized rung:
+
+  * memory: `rescore_dev_mb=` — the fp32 tier's device-resident MB
+    (N·D·4/2^20 under device placement, 0.0 under host — the N-ceiling
+    lift the fig15 smoke gates on) next to `host_mb=`, where the bytes
+    went;
+  * latency: `qps=` per (rung, tier) — the host rows price the
+    cross-boundary gather against the device-resident rescore;
+  * exactness: `parity=1` on every host row — ids, distances, and
+    n_expanded compared bitwise against the device-tier result IN-RUN
+    (the tests/test_tiered.py contract, re-checked on real data here).
+
+Row names are `fig15/<dataset>/<rung>/<tier><backend-tag>`; every row
+carries the schema-validated `tier=` field (benchmarks/run.py
+SMOKE_SCHEMA 7).
+
+    PYTHONPATH=src python benchmarks/fig15_tiered.py [--backend ref]
+    PYTHONPATH=src python benchmarks/fig15_tiered.py --smoke
+
+`--smoke` is the acceptance gate: a tiny interpret-mode sweep whose rows
+are parsed and validated in-process — both tiers per (dataset, rung),
+parity=1 and zero device rescore bytes on every host row — non-zero
+exit on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig15_tiered.py`
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import grnnd, vecstore as VS
+from repro.core.recall import recall_at_k
+
+SMOKE_N = 192
+RUNGS = ("int8", "bf16")
+TIERS = VS.PLACEMENTS  # ("device", "host")
+
+_REC_RE = re.compile(r"(?:^|\s)recall=(\S+)")
+_PARITY_RE = re.compile(r"(?:^|\s)parity=(\S+)")
+_RDEV_RE = re.compile(r"(?:^|\s)rescore_dev_mb=(\S+)")
+_HOST_RE = re.compile(r"(?:^|\s)host_mb=(\S+)")
+
+
+def _same(a, b) -> bool:
+    return (np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+            and np.array_equal(np.asarray(a.dists), np.asarray(b.dists))
+            and np.array_equal(np.asarray(a.n_expanded),
+                               np.asarray(b.n_expanded)))
+
+
+def run(n: int = 3000, backend: str | None = None) -> list[str]:
+    """The fig11 pipeline per rung (graph BUILT on the quantized store,
+    traversal in storage precision), then both placements of the fp32
+    rescore tier searched over the SAME graph — the placement axis is a
+    pure query-path property, so the host/device pair is bitwise
+    comparable."""
+    eff, tag = C.resolve_backend(backend)
+    interp = eff == "interpret"
+    if interp:
+        n = min(n, C.INTERPRET_MAX_N)
+    nq, repeats, ef = (32, 1, 32) if interp else (96, 3, C.EF)
+
+    rows = []
+    datasets = list(C.bench_datasets(n=n, nq=nq).items())
+    if interp:
+        datasets = datasets[:1]  # same smoke-budget rationale as fig11/13
+    for name, (x, q, gt) in datasets:
+        cfg = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=4, rho=0.6,
+                                pairs_per_vertex=24)
+        rescore_mb = x.shape[0] * x.shape[1] * 4 / 2**20
+        for rung in RUNGS:
+            store = VS.encode(x, rung)
+            with C.backend_scope(backend):
+                pool, _ = C.timed_build(store, cfg)
+            results = {}
+            for tier in TIERS:  # device first: the host row checks parity
+                resc = VS.HostTier(x) if tier == "host" else x
+                res, qps = C.timed_search(store, pool.ids, q, ef=ef,
+                                          repeats=repeats, backend=backend,
+                                          rescore=resc)
+                results[tier] = res
+                rec = recall_at_k(res.ids, gt)
+                host = tier == "host"
+                parity = ("" if not host else
+                          f"parity={int(_same(results['device'], res))} ")
+                rows.append(C.row(
+                    f"fig15/{name}/{rung}/{tier}{tag}", 1.0 / qps,
+                    f"recall={rec:.3f} qps={qps:.0f} tier={tier} {parity}"
+                    f"rescore_dev_mb={0.0 if host else rescore_mb:.4f} "
+                    f"host_mb={rescore_mb if host else 0.0:.4f} "
+                    f"ef={ef} backend={eff}",
+                    precision=rung,
+                    bytes_per_vector=store.bytes_per_vector()))
+    return rows
+
+
+def validate_tiered_rows(parsed: list[dict]) -> None:
+    """The fig15 acceptance gate (shared with benchmarks/run.py).
+
+    Raises ValueError unless every fig15 row carries a valid `tier=`,
+    every host row shows ZERO device-resident rescore bytes (the §13
+    placement contract) and in-run bitwise parity against its device
+    twin, and each (dataset, rung) covers both placements.
+    """
+    fig15 = [p for p in parsed if p["name"].startswith("fig15/")]
+    if not fig15:
+        raise ValueError("no fig15 rows to validate")
+    seen: dict[tuple, set] = {}
+    for p in fig15:
+        _, ds, rung, _cell = p["name"].split("/", 3)
+        tier = p.get("tier")
+        if tier not in VS.PLACEMENTS:
+            raise ValueError(f"fig15 row lacks a valid tier=: {p['name']}")
+        seen.setdefault((ds, rung), set()).add(tier)
+        if not _REC_RE.search(p["derived"]):
+            raise ValueError(f"fig15 row lacks recall=: {p!r}")
+        rdev = _RDEV_RE.search(p["derived"])
+        hmb = _HOST_RE.search(p["derived"])
+        if not rdev or not hmb:
+            raise ValueError(
+                f"fig15 row lacks rescore_dev_mb=/host_mb=: {p!r}")
+        if tier == "host":
+            if float(rdev.group(1)) != 0.0:
+                raise ValueError(
+                    f"{p['name']}: host-tier row reports "
+                    f"{rdev.group(1)}MB of device-resident rescore bytes "
+                    "— the §13 placement contract fails")
+            par = _PARITY_RE.search(p["derived"])
+            if not par or par.group(1) != "1":
+                raise ValueError(
+                    f"{p['name']}: host tier is not bitwise-equal to the "
+                    "device tier (parity != 1)")
+        elif float(rdev.group(1)) <= 0.0:
+            raise ValueError(
+                f"{p['name']}: device-tier row reports no device rescore "
+                "bytes — the memory comparison is vacuous")
+    for (ds, rung), got in seen.items():
+        if got != set(VS.PLACEMENTS):
+            raise ValueError(
+                f"fig15/{ds}/{rung} must cover both placements; got "
+                f"{sorted(got)}")
+
+
+def smoke() -> None:
+    """Tiny interpret-mode sweep + in-process contract validation."""
+    from benchmarks.run import parse_row
+    rows = run(n=SMOKE_N, backend="interpret")
+    for r in rows:
+        print(r, flush=True)
+    validate_tiered_rows([parse_row(r) for r in rows])
+    print("# fig15 smoke: parity + zero-device-rescore contract OK",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for build + search (default: "
+                         "current REPRO_KERNEL_BACKEND/auto)")
+    ap.add_argument("--n", type=int, default=3000,
+                    help="vectors per dataset (interpret runs are capped "
+                         f"at {C.INTERPRET_MAX_N})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode sweep, self-validating "
+                         "(non-zero exit on parity/placement violations)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(n=args.n, backend=args.backend):
+            print(row, flush=True)

@@ -25,7 +25,7 @@ import sys
 import time
 
 ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-       "fig13", "fig14", "roofline")
+       "fig13", "fig14", "fig15", "roofline")
 
 # the artifact contract: bump ONLY with a matching update to every consumer
 # of the perf trajectory (EXPERIMENTS.md §Tables tooling)
@@ -52,7 +52,12 @@ ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
 # drift), and `--check FILE` re-validates an existing artifact so CI can
 # gate the uploaded file independently of the process that wrote it
 # (ISSUE 8)
-SMOKE_SCHEMA = 6
+# schema 7: tiered-storage rows (fig15, core/vecstore.py HostTier) carry
+# `tier=` ("device" or "host" — where the fp32 rescore tier lives) —
+# validated wherever present, required on every fig15 row by the fig15
+# validator, which also gates zero device-resident rescore bytes and
+# bitwise host/device parity on every host row (ISSUE 9)
+SMOKE_SCHEMA = 7
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
 _PRECISIONS = ("fp32", "bf16", "int8")
@@ -64,9 +69,11 @@ _CS_RE = re.compile(r"(?:^|\s)corpus_shards=(\S+)")
 _P50_RE = re.compile(r"(?:^|\s)p50_ms=(\S+)")
 _P99_RE = re.compile(r"(?:^|\s)p99_ms=(\S+)")
 _QPS_RE = re.compile(r"(?:^|\s)qps=(\S+)")
+_TIER_RE = re.compile(r"(?:^|\s)tier=(\S+)")
+_TIERS = ("device", "host")
 # families the smoke artifact must always cover (one per serving surface)
 SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "fig13",
-                  "fig14", "roofline")
+                  "fig14", "fig15", "roofline")
 
 
 def _module(name: str):
@@ -90,6 +97,8 @@ def _module(name: str):
         from benchmarks import fig13_corpus_sharded as m
     elif name == "fig14":
         from benchmarks import fig14_serving as m
+    elif name == "fig15":
+        from benchmarks import fig15_tiered as m
     elif name == "roofline":
         from benchmarks import roofline as m
     else:
@@ -122,6 +131,11 @@ def parse_row(row: str) -> dict:
     serve/ann_engine.py) are lifted; where present they must parse as
     non-negative floats.  The fig14 validator additionally REQUIRES all
     three on every fig14 row and gates p50 <= p99 + completion.
+
+    Schema 7: an optional `tier=<placement>` (tiered-storage rows,
+    core/vecstore.py HostTier) is lifted; where present it must be
+    "device" or "host".  The fig15 validator additionally REQUIRES it on
+    every fig15 row and gates the placement + parity contract.
     """
     parts = row.split(",", 2)
     if len(parts) != 3:
@@ -161,11 +175,17 @@ def parse_row(row: str) -> dict:
             serving[field] = float(m.group(1))
             if serving[field] < 0:
                 raise ValueError(f"negative {field}: {row!r}")
+    tier = _TIER_RE.search(derived)
+    tier_val = None
+    if tier:
+        tier_val = tier.group(1)
+        if tier_val not in _TIERS:
+            raise ValueError(f"tier outside {_TIERS}: {row!r}")
     return {"name": name, "us_per_call": float(us), "derived": derived,
             "precision": prec.group(1), "bytes_per_vector": bpv_val,
             "selectivity": sel_val,
             "opt_layout": opt.group(1) if opt else None,
-            "corpus_shards": cs_val, **serving}
+            "corpus_shards": cs_val, "tier": tier_val, **serving}
 
 
 def validate_rows(parsed: list[dict]) -> None:
@@ -174,7 +194,7 @@ def validate_rows(parsed: list[dict]) -> None:
     must fail, not just one that crashes), no ERROR rows (a crashed
     benchmark must fail CI, not upload a hole), and the per-family
     validators (fig6 layout, fig11 precision ladder, fig12 filtered,
-    fig13 corpus-sharded, fig14 serving)."""
+    fig13 corpus-sharded, fig14 serving, fig15 tiered placement)."""
     for fam in SMOKE_FAMILIES:
         ok = [p for p in parsed
               if p["name"].startswith(fam + "/")
@@ -190,11 +210,13 @@ def validate_rows(parsed: list[dict]) -> None:
     from benchmarks.fig12_filtered import validate_filtered_rows
     from benchmarks.fig13_corpus_sharded import validate_corpus_rows
     from benchmarks.fig14_serving import validate_serving_rows
+    from benchmarks.fig15_tiered import validate_tiered_rows
     validate_layout_rows(parsed)
     validate_precision_rows(parsed)
     validate_filtered_rows(parsed)
     validate_corpus_rows(parsed)
     validate_serving_rows(parsed)
+    validate_tiered_rows(parsed)
 
 
 def run_smoke(out_path: str) -> None:
@@ -209,6 +231,7 @@ def run_smoke(out_path: str) -> None:
         ("fig12", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig13", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig14", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig15", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("roofline", lambda m: m.run()),
     )
     for name, call in calls:

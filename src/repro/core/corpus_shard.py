@@ -69,7 +69,8 @@ from repro.core import pools as P
 from repro.core import vecstore as VS
 from repro.core.grnnd import GRNNDConfig, build_graph, reverse_edge_round
 from repro.core.search import (
-    SearchResult, _table_insert, _table_member, default_visited_cap, medoid)
+    SearchResult, _rescore_merge, _table_insert, _table_member,
+    default_visited_cap, medoid)
 from repro.kernels import ops
 
 __all__ = [
@@ -124,8 +125,13 @@ class CorpusShardedIndex(NamedTuple):
     params, replicated (they are (D,), not O(N)).  `graphs` rows carry
     GLOBAL neighbor ids.  `rescores` is the fp32 exact tier, pre-
     dequantized so the owner-side re-rank is row-for-row the replicated
-    rescore math.  `entry_row`/`entry_valid`/`entry_words` capture the
-    entry vertex's owner-side state at shard() time (see module docstring).
+    rescore math; under `shard(tier="host")` it is instead a
+    `vecstore.HostTier` over the UNSTACKED (N, D) tier — contiguous
+    partitions make the flattened stacked index equal the global id, so
+    the host gather indexes global ids directly and no per-shard device
+    slice exists at all (DESIGN.md §13).  `entry_row`/`entry_valid`/
+    `entry_words` capture the entry vertex's owner-side state at shard()
+    time (see module docstring).
     """
     data: jnp.ndarray                    # (S, n_loc, D) stored bytes
     scale: jnp.ndarray | None            # (D,) frozen quantizer (int8)
@@ -133,7 +139,8 @@ class CorpusShardedIndex(NamedTuple):
     graphs: jnp.ndarray                  # (S, n_loc, R) int32, GLOBAL ids
     row0s: jnp.ndarray                   # (S,) int32 first global row
     valids: jnp.ndarray | None           # (S, n_loc) bool
-    rescores: jnp.ndarray | None         # (S, n_loc, D) fp32 exact tier
+    rescores: object | None              # (S, n_loc, D) fp32 exact tier,
+                                         #   or a host-pinned VS.HostTier
     vwords: jnp.ndarray | None           # (S, n_loc, W) packed label words
     ids_maps: jnp.ndarray | None         # (S, n_loc) int32 layout inv slice
     entry: jnp.ndarray                   # () int32 global entry id
@@ -176,6 +183,7 @@ def shard(
     labels=None,
     ids_map=None,
     entry=None,
+    tier: str = "device",
 ) -> CorpusShardedIndex:
     """Partition a built index into a `CorpusShardedIndex`.
 
@@ -185,7 +193,14 @@ def shard(
     each sliced to its owner shard.  `entry` defaults to the medoid of the
     FULL corpus (computed here, while it is still in one piece — the
     sharded index stores only the entry's id, row, and flags).
+
+    `tier` places the fp32 rescore tier (DESIGN.md §13): "device" slices
+    it per shard like every other O(N) operand; "host" pins the whole
+    dequantized tier on the CPU backend (`vecstore.HostTier`) — devices
+    then hold int8 + graph only, and the re-rank gathers the final ef
+    rows per query across the boundary, bitwise-equal either way.
     """
+    assert tier in VS.PLACEMENTS, tier
     gids = graph.ids if hasattr(graph, "ids") else graph
     n = int(VS.parts(x)[0].shape[0])
     assert gids.shape[0] == n, (gids.shape, n)
@@ -201,6 +216,15 @@ def shard(
     # the dequantized exact tier: owner-side rescue math must be row-for-row
     # the replicated `VS.take(rescore, ·)` gather (bitwise contract)
     resc = None if rescore is None else VS.dequant(rescore)
+    if resc is not None and tier == "host":
+        # host placement keeps the tier UNSTACKED — the HostTier gathers
+        # by global id, and global id == flattened stacked index anyway
+        # (contiguous partitions; only the last shard pads)
+        resc_field = VS.HostTier(resc)
+    elif resc is not None:
+        resc_field = _stack_shards(resc, row0s, n_loc, 0)
+    else:
+        resc_field = None
     idx = CorpusShardedIndex(
         data=_stack_shards(xd, row0s, n_loc, 0),
         scale=xs, offset=xo,
@@ -208,8 +232,7 @@ def shard(
         row0s=jnp.asarray(row0s, jnp.int32),
         valids=(None if valid is None
                 else _stack_shards(jnp.asarray(valid), row0s, n_loc, False)),
-        rescores=(None if resc is None
-                  else _stack_shards(resc, row0s, n_loc, 0)),
+        rescores=resc_field,
         vwords=(None if vwords is None
                 else _stack_shards(vwords, row0s, n_loc, 0)),
         ids_maps=(None if ids_map is None
@@ -222,13 +245,14 @@ def shard(
     return idx
 
 
-def shard_optimized(opt, n_shards: int) -> CorpusShardedIndex:
+def shard_optimized(opt, n_shards: int,
+                    tier: str = "device") -> CorpusShardedIndex:
     """Partition a PR 6 `layout.OptimizedIndex` (the composition contract):
     shards slice the PERMUTED rows; each shard owns its slice of `inv`, so
     returned ids come back in the caller's original numbering."""
     return shard(opt.x, opt.graph_ids, n_shards, valid=opt.valid,
                  rescore=opt.rescore, labels=opt.vwords,
-                 ids_map=opt.inv, entry=opt.entry)
+                 ids_map=opt.inv, entry=opt.entry, tier=tier)
 
 
 # ---------------------------------------------------------------------------
@@ -506,18 +530,42 @@ def sharded_search(
     else:
         cap = (visited_cap if visited_cap is not None
                else default_visited_cap(ef))
+    host = VS.is_host(index.rescores)
+    if host:
+        # host-cold tier (DESIGN.md §13): traversal runs without the
+        # rescore/ids_map operands and keeps the full ef beam (k=ef); the
+        # returned GLOBAL ids drive the host gather, then the same
+        # `_rescore_merge` program as the replicated host path re-ranks.
+        # The deferred ids_map is the flattened stack — flat index ==
+        # global id under contiguous partitions, so the single gather is
+        # value-for-value the owner-side `_cmax_i32` fold.
+        run_idx = index._replace(rescores=None, ids_maps=None)
+        k_run = ef
+    else:
+        run_idx, k_run = index, k
     if mesh is not None:
         from repro.core import distributed as D
-        return D.corpus_sharded_search(
-            mesh, axes, index, queries, k=k, ef=ef, max_steps=max_steps,
-            visited=visited, visited_cap=cap, fwords=fwords)
-    return _reference_impl(
-        index.data, index.scale, index.offset, index.graphs, index.row0s,
-        queries, index.entry, index.entry_row, index.entry_valid,
-        index.rescores, index.valids, index.ids_maps, index.vwords,
-        index.entry_words, fwords, n=index.n, k=k, ef=ef,
-        max_steps=max_steps, visited=visited, visited_cap=cap,
-        backend=ops.effective_backend())
+        res = D.corpus_sharded_search(
+            mesh, axes, run_idx, queries, k=k_run, ef=ef,
+            max_steps=max_steps, visited=visited, visited_cap=cap,
+            fwords=fwords)
+    else:
+        res = _reference_impl(
+            run_idx.data, run_idx.scale, run_idx.offset, run_idx.graphs,
+            run_idx.row0s, queries, run_idx.entry, run_idx.entry_row,
+            run_idx.entry_valid, run_idx.rescores, run_idx.valids,
+            run_idx.ids_maps, run_idx.vwords, run_idx.entry_words, fwords,
+            n=run_idx.n, k=k_run, ef=ef, max_steps=max_steps,
+            visited=visited, visited_cap=cap,
+            backend=ops.effective_backend())
+    if not host:
+        return res
+    rv = index.rescores.gather(res.ids)                    # (Q, ef, D)
+    flat_map = (None if index.ids_maps is None
+                else index.ids_maps.reshape(-1))
+    out_ids, out_dists = _rescore_merge(
+        res.ids, rv, jnp.asarray(queries, jnp.float32), flat_map, k=k)
+    return SearchResult(out_ids, out_dists, res.n_expanded)
 
 
 # ---------------------------------------------------------------------------
@@ -622,7 +670,12 @@ def memory_report(index: CorpusShardedIndex) -> dict:
     def nbytes(a):
         return 0 if a is None else int(a.size) * a.dtype.itemsize
 
-    sliced = (index.data, index.graphs, index.valids, index.rescores,
+    # a host-pinned rescore tier contributes ZERO device bytes (the §13
+    # contract the fig15 smoke gates on); its footprint is reported
+    # separately as host bytes
+    host = VS.is_host(index.rescores)
+    resc_dev = None if host else index.rescores
+    sliced = (index.data, index.graphs, index.valids, resc_dev,
               index.vwords, index.ids_maps)
     per_slice = sum(nbytes(a) // index.n_shards for a in sliced)
     rep_small = (nbytes(index.scale) + nbytes(index.offset)
@@ -636,4 +689,6 @@ def memory_report(index: CorpusShardedIndex) -> dict:
         "n_loc": index.n_loc,
         "per_shard_bytes": per_slice + rep_small,
         "replicated_bytes": replicated,
+        "rescore_device_bytes": nbytes(resc_dev) // index.n_shards,
+        "rescore_host_bytes": index.rescores.host_bytes() if host else 0,
     }

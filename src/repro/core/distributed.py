@@ -55,7 +55,7 @@ from repro.core import pools as P
 from repro.core import vecstore as VS
 from repro.core.grnnd import (
     GRNNDConfig, _pair_requests_chunk, _sorted_requests_chunk)
-from repro.core.search import SearchResult, medoid, search
+from repro.core.search import SearchResult, _rescore_merge, medoid, search
 from repro.kernels import ops
 
 
@@ -221,7 +221,8 @@ def sharded_build_graph(
 def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
                        max_steps: int, visited: str, visited_cap: int | None,
                        has_valid: bool, quantized: bool, has_rescore: bool,
-                       has_filter: bool, has_map: bool, backend: str):
+                       has_filter: bool, has_map: bool, backend: str,
+                       overfetch: int = 4):
     """One jitted shard_map per (mesh, axes, search-config) — cached so
     repeated serving batches reuse the compiled executable instead of
     re-tracing per call.  `has_valid` selects the tombstone-masked variant
@@ -238,8 +239,11 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
     versa).  `has_map` selects the optimized-layout variant (core/
     layout.py): the (N,) inverse permutation replicates like the graph
     and each shard applies it to its own result slice — a per-row gather,
-    so shard invariance is untouched.  `backend` is unused in the body
-    but part of the cache key:
+    so shard invariance is untouched.  `overfetch` is the inner search's
+    filtered-widening factor — in the cache key because the host-tier
+    path (below) pre-widens ef itself and runs with overfetch=1, and the
+    two configurations must never share an executable.  `backend` is
+    unused in the body but part of the cache key:
     the inner search dispatches kernels at trace time (same contract as
     search._search_impl)."""
     del backend
@@ -258,7 +262,8 @@ def _sharded_search_fn(mesh: Mesh, axes: tuple, k: int, ef: int,
         return search(x_in, graph_r, q_loc, k=k, ef=ef, max_steps=max_steps,
                       entry=entry_r, visited=visited, visited_cap=visited_cap,
                       valid=valid, rescore=rescore,
-                      labels=vwords, filter=fwords, ids_map=ids_map)
+                      labels=vwords, filter=fwords, ids_map=ids_map,
+                      overfetch=overfetch)
 
     n_extra = 2 * quantized + has_rescore + has_valid + has_map
     in_specs = ((rspec, rspec, qspec, rspec) + (rspec,) * n_extra
@@ -320,6 +325,12 @@ def distributed_search(
     `ids_map` is the optimized-layout inverse permutation (core/layout.py,
     `OptimizedIndex.inv`), replicated like the graph; each shard maps its
     own returned ids back to original numbering.
+
+    A `vecstore.HostTier` rescore selects the host-cold placement
+    (DESIGN.md §13): the tier is never replicated onto the mesh at all —
+    the shards traverse without it (full-ef results, ids_map deferred),
+    the final ids cross to the host once per batch, and the shared
+    `_rescore_merge` program finishes — bitwise the device-resident path.
     """
     axes = tuple(axes)
     n_shards = 1
@@ -337,6 +348,18 @@ def distributed_search(
         vwords = L.store_words(labels)
         fwords = L.query_words(filter, vwords.shape[1])
 
+    host = VS.is_host(rescore)
+    if host:
+        # pre-apply the inner search's filtered widening (its default
+        # overfetch=4), then run k=ef with overfetch=1 so the shards
+        # return the FULL beam/heap the host re-rank needs; rescore and
+        # ids_map stay off the mesh and are applied after the gather
+        ef_run = max(ef, 4 * k) if filter is not None else ef
+        k_run, of_run = ef_run, 1
+    else:
+        ef_run, k_run, of_run = ef, k, 4
+
+    q_in = queries  # pre-pad queries, for the host-side re-rank
     qn = queries.shape[0]
     pad = (-qn) % n_shards
     if pad:
@@ -348,11 +371,13 @@ def distributed_search(
 
     xd, xs, xo = VS.parts(x)
     quantized = xs is not None
-    sharded = _sharded_search_fn(mesh, axes, k, ef, max_steps, visited,
-                                 visited_cap, valid is not None,
-                                 quantized, rescore is not None,
-                                 filter is not None, ids_map is not None,
-                                 ops.effective_backend())
+    sharded = _sharded_search_fn(mesh, axes, k_run, ef_run, max_steps,
+                                 visited, visited_cap, valid is not None,
+                                 quantized,
+                                 rescore is not None and not host,
+                                 filter is not None,
+                                 ids_map is not None and not host,
+                                 ops.effective_backend(), overfetch=of_run)
     rep = NamedSharding(mesh, PSpec())
     xd = jax.device_put(xd, rep)
     graph_ids = jax.device_put(graph_ids, rep)
@@ -361,11 +386,11 @@ def distributed_search(
     extra = ()
     if quantized:
         extra += (jax.device_put(xs, rep), jax.device_put(xo, rep))
-    if rescore is not None:
+    if rescore is not None and not host:
         extra += (jax.device_put(rescore, rep),)
     if valid is not None:
         extra += (jax.device_put(valid, rep),)
-    if ids_map is not None:
+    if ids_map is not None and not host:
         extra += (jax.device_put(ids_map, rep),)
     if filter is not None:
         extra += (jax.device_put(vwords, rep),
@@ -373,6 +398,11 @@ def distributed_search(
     res = sharded(xd, graph_ids, queries, entry, *extra)
     if pad:
         res = SearchResult(res.ids[:qn], res.dists[:qn], res.n_expanded[:qn])
+    if host:
+        rv = rescore.gather(res.ids)                       # (Q, ef, D)
+        out_ids, out_dists = _rescore_merge(
+            res.ids, rv, jnp.asarray(q_in, jnp.float32), ids_map, k=k)
+        return SearchResult(out_ids, out_dists, res.n_expanded)
     return res
 
 

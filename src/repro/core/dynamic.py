@@ -78,6 +78,11 @@ class DynamicConfig(NamedTuple):
     compact_threshold: float = 0.25   # tombstone fraction that triggers compact()
     min_capacity: int = 64            # smallest padded buffer
     precision: str = "fp32"           # traversal-tier storage (DESIGN.md §8)
+    tier: str = "device"              # fp32 rescore-tier placement
+                                      # ("device"/"host", DESIGN.md §13);
+                                      # "host" pins the fp32 buffer on the
+                                      # CPU backend — needs a quantized
+                                      # traversal tier to search against
     layout: str | None = None         # locality renumbering ("bfs"/"hub",
                                       # core/layout.py §DESIGN.md §10): slots
                                       # are permuted at construction and
@@ -212,6 +217,10 @@ class DynamicIndex:
         n, d = x.shape
         assert pool.ids.shape[0] == n
         assert cfg.precision in VS.PRECISIONS, cfg.precision
+        assert cfg.tier in VS.PLACEMENTS, cfg.tier
+        assert cfg.tier == "device" or cfg.precision != "fp32", \
+            "tier='host' needs a quantized traversal tier (the fp32 buffer " \
+            "IS the traversal tier at precision='fp32')"
         assert cfg.layout is None or cfg.layout in LY.ORDERS, cfg.layout
         self.cfg = cfg
         self.r = pool.r
@@ -226,6 +235,15 @@ class DynamicIndex:
         cap = _pow2_capacity(n, cfg.min_capacity)
         self.x = jnp.zeros((cap, d), jnp.float32).at[:n].set(
             x.astype(jnp.float32))
+        if cfg.tier == "host":
+            # pin the fp32 tier host-side (DESIGN.md §13).  Committed
+            # placement is sticky through jnp ops: insert's scatter,
+            # capacity-growth pads, and compact's row gather all produce
+            # host-committed results, so every later mutation writes the
+            # cold tier in place without re-shipping the buffer.
+            self.x = jax.device_put(self.x, VS.host_device())
+        self._host_tier: VS.HostTier | None = None
+        self._host_src = None  # identity of the buffer the cache wraps
         if cfg.precision == "fp32":
             self.store = None
         else:
@@ -237,13 +255,16 @@ class DynamicIndex:
             # graph may have been built at fp32, and every later mutation
             # — RNG kills, topr_merge ranks — compares against THESE
             # values, so they must be d(x̂_i, x̂_j), not d(x_i, x_j).
-            # Recompute per edge (one-time O(N·R·D)) and re-sort.
-            owners = jnp.repeat(jnp.arange(n, dtype=jnp.int32), pool.r)
-            d_t = ops.gather_sqdist(
-                enc, owners, jnp.clip(pool.ids.reshape(-1), 0)
-            ).reshape(n, pool.r)
-            d_t = jnp.where(pool.ids >= 0, d_t, jnp.inf)
-            pool = P.Pool(*ops.topr_merge(pool.ids, d_t, pool.r))
+            # Recompute per edge (one-time O(N·R·D)) and re-sort.  An
+            # empty corpus has no edges to re-base, and the gather kernel
+            # cannot slice a 0-row operand — skip it outright.
+            if n:
+                owners = jnp.repeat(jnp.arange(n, dtype=jnp.int32), pool.r)
+                d_t = ops.gather_sqdist(
+                    enc, owners, jnp.clip(pool.ids.reshape(-1), 0)
+                ).reshape(n, pool.r)
+                d_t = jnp.where(pool.ids >= 0, d_t, jnp.inf)
+                pool = P.Pool(*ops.topr_merge(pool.ids, d_t, pool.r))
         self.pool = P.Pool(
             ids=jnp.full((cap, self.r), -1, jnp.int32).at[:n].set(pool.ids),
             dists=jnp.full((cap, self.r), jnp.inf, jnp.float32).at[:n].set(
@@ -291,6 +312,19 @@ class DynamicIndex:
         """The traversal-tier dataset the kernels read: the quantized
         store when one exists, the fp32 buffer otherwise."""
         return self.store if self.store is not None else self.x
+
+    def _rescore_tier(self):
+        """The rescore operand `search()` passes down: the fp32 buffer
+        directly under device placement, a `HostTier` wrapper under host
+        placement.  The wrapper is cached by buffer identity — mutations
+        replace `self.x` functionally, so a stale cache is impossible and
+        `fetched_rows` accumulates across searches between mutations."""
+        if self.cfg.tier != "host":
+            return self.x
+        if self._host_tier is None or self._host_src is not self.x:
+            self._host_tier = VS.HostTier(self.x)
+            self._host_src = self.x
+        return self._host_tier
 
     def entry(self) -> jnp.ndarray:
         if self._entry is None:
@@ -518,7 +552,12 @@ class DynamicIndex:
         if slots.size:
             self.valid = self.valid.at[jnp.asarray(slots)].set(False)
             self.n_live -= int(slots.size)
-            self._entry = None
+            # the cached entry survives unless ITS slot was tombstoned:
+            # unrelated deletes must not force an O(N·D) medoid recompute,
+            # and must not silently reseed later searches from a different
+            # vertex (tests/test_dynamic.py regression)
+            if self._entry is not None and np.any(slots == int(self._entry)):
+                self._entry = None
         if self.tombstone_fraction > self.cfg.compact_threshold:
             self.compact()
         return int(slots.size)
@@ -618,7 +657,10 @@ class DynamicIndex:
 
         Traversal reads the compact tier; at quantized precision the final
         ef candidates are re-ranked against the fp32 tier (`rescore=None`
-        = auto: on iff the traversal tier is quantized).
+        = auto: on iff the traversal tier is quantized).  Under
+        `cfg.tier == "host"` that tier lives on the CPU backend and the
+        re-rank gathers the ef rows across the boundary — bitwise-equal
+        results (DESIGN.md §13, tests/test_tiered.py).
 
         `filter` is the optional per-query label predicate (core/labels.py
         forms: (Q, W) packed words, (Q, L) bool mask, or (Q,) label ids).
@@ -633,7 +675,7 @@ class DynamicIndex:
                      max_steps=max_steps, entry=self.entry(),
                      visited=visited, visited_cap=visited_cap,
                      valid=self.valid,
-                     rescore=self.x if rescore else None,
+                     rescore=self._rescore_tier() if rescore else None,
                      labels=None if filter is None else self.label_words(),
                      filter=fwords, overfetch=overfetch)
         ids = np.asarray(res.ids)
@@ -667,7 +709,7 @@ class DynamicIndex:
             valid=self.valid,
             rescore=self.x if rescore else None,
             labels=None if filter is None else self.label_words(),
-            entry=self.entry())
+            entry=self.entry(), tier=self.cfg.tier)
         res = CS.sharded_search(
             idx, queries, k=k, ef=ef, max_steps=max_steps, visited=visited,
             visited_cap=visited_cap,

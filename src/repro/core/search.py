@@ -319,6 +319,31 @@ def _search_impl(
     return SearchResult(out_ids, out_dists, n_exp)
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rescore_merge(out_ids, rv, queries, ids_map, *, k: int):
+    """The re-rank half of the host-tier search (DESIGN.md §13).
+
+    Identical math, line for line, to the in-loop rescore tail of
+    `_search_impl`: exact fp32 distances against the gathered rows, pad
+    slots masked to +inf BY ID (so the gathered content of a pad row is
+    irrelevant — the host gather ships zeros for them), the same
+    `topr_merge` re-sort, the same k-slice-then-ids_map order.  Running
+    it as a second jitted program instead of inside the traversal
+    program cannot change a bit: every op is the same jnp formula on the
+    same operands (the corpus-shard tier relies on the identical
+    same-formula-across-programs contract).
+    """
+    ef = out_ids.shape[1]
+    diff = queries[:, None, :] - rv
+    d_exact = jnp.sum(diff * diff, axis=-1)
+    d_exact = jnp.where(out_ids >= 0, d_exact, jnp.inf)
+    out_ids, out_dists = ops.topr_merge(out_ids, d_exact, ef)
+    out_ids, out_dists = out_ids[:, :k], out_dists[:, :k]
+    if ids_map is not None:
+        out_ids = jnp.where(out_ids >= 0, ids_map[jnp.clip(out_ids, 0)], -1)
+    return out_ids, out_dists
+
+
 def search(
     x,
     graph_ids: jnp.ndarray,
@@ -359,7 +384,12 @@ def search(
     CAGRA/GGNN two-tier layout): an (N, D) fp32 array (or higher-precision
     store) from which the final ef candidates are re-ranked with exact
     distances.  None (the default) returns traversal-space distances
-    unchanged — the fp32 path stays bit-for-bit.
+    unchanged — the fp32 path stays bit-for-bit.  A `vecstore.HostTier`
+    selects the HOST-COLD placement (DESIGN.md §13): traversal runs
+    device-side without the rescore operand, the final ef candidate ids
+    cross to the host, ef·D fp32 bytes come back (pad slots excluded from
+    the transfer), and `_rescore_merge` re-ranks with the identical math
+    — bitwise-equal to the device-resident tier (tests/test_tiered.py).
 
     `labels`/`filter` select FILTERED search (core/labels.py, DESIGN.md
     §9): `labels` is a `LabelStore` (or raw (N, W) packed vertex words)
@@ -398,6 +428,21 @@ def search(
         cap = 0  # unused; normalized so it never fragments the jit cache
     else:
         cap = visited_cap if visited_cap is not None else default_visited_cap(ef)
+    if VS.is_host(rescore):
+        # host-cold tier: traversal compiles WITHOUT the rescore operand
+        # (k=ef keeps the full beam/heap — the k-slice is deferred to the
+        # merge program), the gather crosses the boundary in host numpy,
+        # and the re-rank runs as its own jitted program.  ids_map is
+        # also deferred so the host gather indexes internal row numbers.
+        res = _search_impl(x, graph_ids, queries, entry, valid, None,
+                           vwords, fwords, None,
+                           k=ef, ef=ef, max_steps=max_steps,
+                           visited=visited, visited_cap=cap,
+                           backend=ops.effective_backend())
+        rv = rescore.gather(res.ids)                       # (Q, ef, D)
+        out_ids, out_dists = _rescore_merge(
+            res.ids, rv, jnp.asarray(queries, jnp.float32), ids_map, k=k)
+        return SearchResult(out_ids, out_dists, res.n_expanded)
     return _search_impl(x, graph_ids, queries, entry, valid, rescore,
                         vwords, fwords, ids_map,
                         k=k, ef=ef, max_steps=max_steps,

@@ -31,6 +31,14 @@ candidate ids gather their fp32 rows (ef·D bytes per query — tiny next to
 traversal traffic) and are re-ranked with exact distances, the
 CAGRA/GGNN two-tier layout.
 
+TIER PLACEMENT (DESIGN.md §13): the rescore tier touches only the final
+ef candidate rows per query, so it does not have to live in device
+memory at all.  `HostTier` pins the dequantized fp32 tier on the host
+(CPU) backend and serves the rescore gather across the boundary — the
+traversal tier (this store) stays device-resident, and device memory
+holds int8 + graph only.  `PLACEMENTS` names the axis; `is_host` is the
+placement probe every rescore consumer branches on.
+
 This module depends only on jax and `kernels/ref.py` (the shared dequant
 formula); kernels/ops.py duck-types on the (data, scale, offset) triple,
 so no import cycle with the core package exists.
@@ -39,7 +47,9 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 # the single dequant formula, shared with the kernel oracles (and inlined,
 # operation-for-operation, in the Pallas kernel bodies)
@@ -136,8 +146,18 @@ def quantize_int8(x: jnp.ndarray) -> VectorStore:
     elementwise (tests/test_precision.py property tier).  A constant
     dimension gets scale 1 (q = 0 everywhere, x̂ = offset = the constant,
     zero error) rather than a 0/0.
+
+    An EMPTY (0, D) corpus is well-defined: scale 1, offset 0 per dim
+    (the constant-dimension convention with nothing observed), so the
+    empty-then-grow dynamic-index path can encode before any insert —
+    `jnp.min` over the empty axis has no identity and would raise.
     """
     x = jnp.asarray(x, jnp.float32)
+    if x.shape[0] == 0:
+        d = x.shape[1]
+        return VectorStore(jnp.zeros((0, d), jnp.int8),
+                           jnp.ones((d,), jnp.float32),
+                           jnp.zeros((d,), jnp.float32))
     lo = jnp.min(x, axis=0)
     hi = jnp.max(x, axis=0)
     offset = lo + (hi - lo) * 0.5
@@ -194,3 +214,77 @@ def dequant(x) -> jnp.ndarray:
 
 def precision_of(x) -> str:
     return as_store(x).precision
+
+
+# -- tier placement: device-hot traversal, host-cold rescore (§13) ----------
+
+PLACEMENTS = ("device", "host")
+
+
+def host_device():
+    """The host-side placement target: the first CPU backend device."""
+    return jax.devices("cpu")[0]
+
+
+class HostTier:
+    """The fp32 rescore tier, pinned host-side (DESIGN.md §13).
+
+    Wraps the PRE-DEQUANTIZED (N, D) fp32 matrix committed to the CPU
+    backend (`jax.device_put`).  Pre-dequantizing follows the
+    corpus-shard precedent (`CorpusShardedIndex.rescores`): the rows a
+    gather returns are produced by the one shared `dequant_rows`
+    formula, so they are bitwise-identical to what `VectorStore.take`
+    yields on-device, and the re-rank math downstream cannot diverge.
+
+    Deliberately a PLAIN CLASS, not a NamedTuple/pytree: it can never be
+    passed into a jitted program by accident.  The gather happens in
+    host numpy between the two jitted halves of the search (traversal,
+    then `_rescore_merge`), which is exactly the explicit host/device
+    boundary the tier exists to create.
+
+    Pad slots (`id == -1`) are masked OUT of the transfer — their row
+    content is irrelevant because the merge masks their distance to +inf
+    — and `fetched_rows` counts only real rows, making the cross-
+    boundary traffic (ef·D·4 bytes per query, minus pads) observable.
+    """
+
+    def __init__(self, x):
+        self.data = jax.device_put(dequant(x), host_device())
+        # zero-copy on CPU backends; one D2H copy otherwise, at init only
+        self._np = np.asarray(self.data)
+        self.fetched_rows = 0
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.data.shape
+
+    def device_bytes(self) -> int:
+        """Accelerator-resident bytes of this tier: none, by contract."""
+        return 0
+
+    def host_bytes(self) -> int:
+        return int(self._np.nbytes)
+
+    def gather(self, ids) -> jnp.ndarray:
+        """Fetch fp32 rows for candidate ids (any shape); pad slots
+        (`-1`) transfer nothing and come back as zero rows (the merge
+        never reads them — it masks by id, not by content)."""
+        ids_np = np.asarray(ids)
+        sel = ids_np >= 0
+        out = np.zeros(ids_np.shape + (self._np.shape[1],), np.float32)
+        out[sel] = self._np[ids_np[sel]]
+        self.fetched_rows += int(sel.sum())
+        return jnp.asarray(out)
+
+
+def is_host(x) -> bool:
+    """Placement probe: is this rescore operand the host-cold tier?"""
+    return isinstance(x, HostTier)

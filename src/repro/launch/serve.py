@@ -33,6 +33,16 @@ final ef candidates are re-ranked against the fp32 tier (exact
 distances) unless `--no-rescore` is given; the printed `bpv=` column is
 the traversal-tier bytes/vector.
 
+`--tier {device,host}` places that fp32 rescore tier (DESIGN.md §13):
+`host` pins it on the CPU backend — device memory holds the quantized
+traversal tier + graph only — and the re-rank gathers the final ef rows
+per query across the host boundary.  Results are bitwise-identical to
+`--tier device` (tests/test_tiered.py); requires a quantized
+`--precision` with rescoring on.  Composes with every serving mode:
+`--shards` (the tier never replicates onto the mesh), `--corpus-shards`
+(no per-shard rescore slice exists), `--engine`, and `--mutable`
+(inserts write the host tier in place).
+
 `--filter-labels L` turns on FILTERED serving (DESIGN.md §9): every vertex
 gets a synthetic label uniform in [0, L) (deterministic seed), and each
 query carries a random allowed-label predicate of ~`--selectivity`·L
@@ -119,6 +129,15 @@ def main():
                     help="skip the fp32 rescoring pass (quantized "
                          "precisions only; shows the raw traversal-space "
                          "recall)")
+    ap.add_argument("--tier", default="device",
+                    choices=list(vecstore.PLACEMENTS),
+                    help="fp32 rescore-tier placement (DESIGN.md §13): "
+                         "'host' pins the rescore tier on the CPU backend "
+                         "— device memory holds the quantized traversal "
+                         "tier + graph only, and the re-rank gathers the "
+                         "final ef rows per query across the boundary "
+                         "(bitwise-identical results; needs a quantized "
+                         "--precision with rescoring on)")
     ap.add_argument("--mutable", action="store_true",
                     help="serve through a DynamicIndex with per-batch "
                          "insert/delete churn (see module docstring)")
@@ -199,6 +218,13 @@ def main():
     if args.no_rescore and args.precision == "fp32":
         ap.error("--no-rescore only applies with --precision bf16/int8 "
                  "(fp32 traversal is already exact)")
+    if args.tier == "host" and args.precision == "fp32":
+        ap.error("--tier host places the fp32 RESCORE tier; at --precision "
+                 "fp32 the fp32 buffer IS the traversal tier and must stay "
+                 "device-resident")
+    if args.tier == "host" and args.no_rescore:
+        ap.error("--tier host without a rescore pass places nothing; drop "
+                 "--no-rescore")
     if args.selectivity is not None and not args.filter_labels:
         ap.error("--selectivity only applies with --filter-labels")
     if args.filter_labels and not (args.selectivity is None
@@ -241,8 +267,8 @@ def main():
         xt = jax.tree.map(lambda a: jax.device_put(a, rep), xt)
         ids = jax.device_put(ids, rep)
         entry = jax.device_put(entry, rep)
-        if rescore is not None:
-            rescore = jax.device_put(rescore, rep)
+        if rescore is not None and not vecstore.is_host(rescore):
+            rescore = jax.device_put(rescore, rep)  # host tier stays put
         if ids_map is not None:
             ids_map = jax.device_put(ids_map, rep)
 
@@ -296,6 +322,7 @@ def main():
           f"backend={ops.effective_backend()}  visited={args.visited}  "
           f"precision={args.precision}  bpv={bpv:.0f}  "
           f"rescore={int(rescore is not None)}  "
+          f"tier={args.tier}  "
           f"opt_layout={args.optimize_layout or 'none'}  "
           f"shards={max(args.shards, 1)}  "
           f"corpus_shards={max(args.corpus_shards, 1)}")
@@ -338,6 +365,7 @@ def serve_engine(args, x, blob, ids):
         idx = DynamicIndex(x, Pool(ids, jnp.asarray(blob["dists"])),
                            DynamicConfig(refine_rounds=rounds,
                                          precision=args.precision,
+                                         tier=args.tier,
                                          layout=args.optimize_layout),
                            vertex_labels=(None if lstore is None
                                           else lstore.labels),
@@ -435,7 +463,8 @@ def serve_engine(args, x, blob, ids):
           f"occupancy={s.mean_occupancy:.2f}  buckets={s.n_buckets}  "
           f"completed={s.n_completed}  rejected={s.n_rejected}  {extra}"
           f"backend={ops.effective_backend()}  visited={args.visited}  "
-          f"precision={args.precision}  mutable={int(args.mutable)}  "
+          f"precision={args.precision}  tier={args.tier}  "
+          f"mutable={int(args.mutable)}  "
           f"corpus_shards={max(args.corpus_shards, 1)}")
 
 
@@ -472,13 +501,19 @@ def _static_setup(args, x, ids):
         from repro.core import corpus_shard as CS
         # partition AFTER the optional layout pass (the §11 composition
         # contract: shards slice the permuted rows, ids_map restores the
-        # caller's numbering owner-side)
+        # caller's numbering owner-side).  --tier host keeps the rescore
+        # tier off the shards entirely (§13).
         cs_idx = CS.shard(xt, ids, args.corpus_shards, rescore=rescore,
-                          labels=words, ids_map=ids_map, entry=entry)
+                          labels=words, ids_map=ids_map, entry=entry,
+                          tier=args.tier)
         if args.corpus_shards <= len(jax.devices()):
             cs_mesh = jax.make_mesh(
                 (args.corpus_shards,), ("data",),
                 devices=jax.devices()[:args.corpus_shards])
+    elif args.tier == "host" and rescore is not None:
+        # host-cold placement (§13): wrap AFTER the layout pass so the
+        # pinned tier holds the permuted rows the internal ids index
+        rescore = vecstore.HostTier(rescore)
     return (xt, ids, entry, rescore, bpv, lstore, sel, ef, words, ids_map,
             cs_idx, cs_mesh)
 
@@ -517,6 +552,7 @@ def serve_mutable(args, x, dists, ids):
     idx = DynamicIndex(x, Pool(ids, dists),
                        DynamicConfig(refine_rounds=rounds,
                                      precision=args.precision,
+                                     tier=args.tier,
                                      layout=args.optimize_layout),
                        vertex_labels=(None if lstore is None
                                       else lstore.labels),
@@ -586,7 +622,7 @@ def serve_mutable(args, x, dists, ids):
           f"live={idx.n_live}  tomb={idx.tombstone_fraction:.2f}  "
           f"rounds={idx.rounds_run}  "
           f"backend={ops.effective_backend()}  visited={args.visited}  "
-          f"precision={args.precision}  "
+          f"precision={args.precision}  tier={args.tier}  "
           f"opt_layout={args.optimize_layout or 'none'}  mutable=1  "
           f"corpus_shards=1")
 

@@ -370,9 +370,13 @@ class StaticWorker:
     """Executes engine batches through `core.search` over a frozen index.
 
     Accepts the full serving configuration surface: a VectorStore traversal
-    tier + fp32 rescore tier (§8), a LabelStore for filtered requests (§9),
-    an optimized-layout ids_map + permuted entry (§10), and the visited-set
-    selection (§6).  Mutations are unsupported by construction.
+    tier + fp32 rescore tier (§8) — device-resident or a host-pinned
+    `vecstore.HostTier` (§13; the placement flows through `search`
+    untouched, and batching stays bitwise-invisible because the host
+    re-rank is per-row like everything else) — a LabelStore for filtered
+    requests (§9), an optimized-layout ids_map + permuted entry (§10),
+    and the visited-set selection (§6).  Mutations are unsupported by
+    construction.
     """
 
     def __init__(

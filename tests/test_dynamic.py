@@ -23,7 +23,7 @@ import pytest
 from repro.core import grnnd, recall
 from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.pools import insert_requests, Requests
-from repro.core.search import _table_insert, search
+from repro.core.search import _table_insert, medoid, search
 from repro.data import synthetic
 from repro.kernels import ref
 from repro.kernels.search_expand import search_expand_pallas
@@ -227,6 +227,58 @@ def test_delete_retry_after_compact_is_noop(small_index):
     assert idx.delete(dels) == 0          # physically gone -> still a no-op
     with pytest.raises(KeyError):
         idx.delete(np.array([idx._next_label]))  # never issued -> error
+
+
+def test_unrelated_delete_keeps_cached_entry_and_results(small_index, corpus):
+    """The entry-cache regression (ISSUE 9 satellite): deleting vertices
+    OTHER than the entry must leave the cached entry slot in place — no
+    O(N·D) medoid recompute, and no silent reseed of later searches from
+    a different vertex.  The delete set is chosen so the live-set medoid
+    actually moves (the pre-fix blanket `_entry = None` would therefore
+    have changed which vertex seeds the beam), and the post-delete search
+    is pinned bitwise to the cached-entry traversal."""
+    _, q, _ = corpus
+    idx = _fresh_index(small_index)
+    idx.search(q[:4], k=K, ef=EF)                  # warm the entry cache
+    e = int(idx._entry)
+    x600, _ = small_index
+    # keep only the entry plus the 99 vertices FARTHEST from it (83%
+    # tombstones, under the 0.9 auto-compact threshold): the live
+    # centroid lands inside the far cluster, so a recomputed live-medoid
+    # provably differs from the cached one
+    dist_e = np.linalg.norm(np.asarray(x600) - np.asarray(x600)[e], axis=1)
+    keep = set(np.argsort(dist_e)[-99:].tolist()) | {e}
+    dels = np.array(sorted(set(range(600)) - keep))
+    live = np.ones(600, bool)
+    live[dels] = False
+    e_live = int(medoid(x600, jnp.asarray(live)))
+    assert e_live != e, "delete set must move the live medoid"
+    idx.delete(dels)
+    assert idx._entry is not None and int(idx._entry) == e
+    got = idx.search(q, k=K, ef=EF)
+    want = search(x600, idx.pool.ids[:600], q, k=K, ef=EF,
+                  entry=jnp.int32(e), valid=idx.valid[:600])
+    np.testing.assert_array_equal(np.asarray(got.ids),
+                                  np.asarray(want.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists),
+                                  np.asarray(want.dists))
+
+
+def test_deleting_the_entry_slot_invalidates_cache(small_index, corpus):
+    """The other half of the contract: when the tombstone DOES hit the
+    cached entry slot, the cache must drop — the next search reseeds
+    from the live medoid instead of a dead vertex."""
+    _, q, _ = corpus
+    idx = _fresh_index(small_index)
+    idx.search(q[:4], k=K, ef=EF)
+    e = int(idx._entry)
+    idx.delete(np.array([e]))
+    assert idx._entry is None
+    res = idx.search(q, k=K, ef=EF)                # reseeds, still works
+    assert int(idx._entry) != e
+    assert bool(idx.valid[int(idx._entry)])
+    got = set(np.asarray(res.ids).ravel().tolist())
+    assert e not in got
 
 
 def test_insert_into_emptied_index_rebootstraps():

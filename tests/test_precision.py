@@ -223,6 +223,37 @@ def test_quantizer_roundtrip_bound(n, d, seed):
 
 
 @settings(deadline=None, max_examples=40)
+@given(n=st.integers(0, 1), d=st.integers(1, 32),
+       prec=st.sampled_from(tuple(p for p in VS.PRECISIONS if p != "fp32")),
+       seed=st.integers(0, 2**31 - 1))
+def test_quantizer_edge_corpora_well_defined(n, d, prec, seed):
+    """The empty/degenerate-corpus contract (ISSUE 9 satellite): encoding
+    an N ∈ {0, 1} corpus must not crash on the empty axis-0 reduction —
+    N=0 freezes the identity params (scale 1, offset 0) so a later
+    `with_rows` insert quantizes through a well-defined map; N=1 has zero
+    range per dim and round-trips its one row exactly (the constant-
+    dimension guard, here for EVERY dim at once)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 10.0
+    st_ = VS.encode(x, prec)
+    assert st_.data.shape == (n, d)
+    if prec == "int8":  # bf16 is affine-free: scale/offset stay None
+        assert np.isfinite(np.asarray(st_.scale)).all()
+        assert np.isfinite(np.asarray(st_.offset)).all()
+    dq = np.asarray(st_.dequant(), np.float32)
+    assert dq.shape == (n, d) and np.isfinite(dq).all()
+    if n == 1 and prec == "int8":
+        np.testing.assert_allclose(dq, np.asarray(x), atol=1e-5)
+    if n == 0 and prec == "int8":
+        np.testing.assert_array_equal(np.asarray(st_.scale), 1.0)
+        np.testing.assert_array_equal(np.asarray(st_.offset), 0.0)
+        # the frozen identity map still admits inserts
+        grown = st_._replace(data=jnp.zeros((4, d), st_.data.dtype))
+        grown = grown.with_rows(jnp.arange(2),
+                                jnp.linspace(-1, 1, 2 * d).reshape(2, d))
+        assert np.isfinite(np.asarray(grown.dequant())).all()
+
+
+@settings(deadline=None, max_examples=40)
 @given(n=st.integers(3, 50), seed=st.integers(0, 2**31 - 1))
 def test_quantizer_monotone_1d(n, seed):
     """Quantization is monotone: sorted 1-D inputs stay sorted after the
