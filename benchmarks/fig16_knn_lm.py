@@ -1,0 +1,228 @@
+"""Fig 16 (beyond the paper): kNN-LM retrieval-in-the-loop decode
+(retrieval/knn_lm.py + serve/engine.py, DESIGN.md §14).
+
+The whole-system scenario: a `DynamicDatastore` (int8 traversal + fp32
+rescore over a DynamicIndex) of the LM's own (hidden, next-token) pairs
+sits inside `ServeEngine`'s decode loop — `logit_hook` queries it with
+every step's post-`final_norm` hidden state and fuses the vote into the
+logits, `token_hook` streams the generation's new pairs back into the
+index while it decodes.  Two rows per run measure the price and the win:
+
+  * `fig16/<arch>/lm<tag>` — the pure-LM decode baseline: `tok_s=`
+    (end-to-end generate throughput, compile-excluded) and `lm_nll=`
+    (teacher-forced NLL on the datastore's own corpus);
+  * `fig16/<arch>/knn-<rung><tag>` — the same engine with retrieval
+    fused in (`lam=`) and streaming inserts live (`grew=` rows added
+    during the timed generation): `tok_s=` now prices the per-step
+    retrieval + insert, and `fused_nll=` must beat `lm_nll=` on the
+    memorization corpus — queries AT stored keys retrieve their own
+    next token, the classic kNN-LM win, so fused-worse-than-pure means
+    the retrieval path (not the LM) is broken.
+
+That ordering is the validation gate (`validate_knn_rows`, enforced on
+every smoke artifact by benchmarks/run.py SMOKE_SCHEMA 8): fused NLL <=
+pure-LM NLL, positive throughput on every row, and both the baseline
+and at least one retrieval row present.
+
+    PYTHONPATH=src python benchmarks/fig16_knn_lm.py [--backend ref]
+    PYTHONPATH=src python benchmarks/fig16_knn_lm.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/fig16_knn_lm.py`
+    import pathlib
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.configs import get_arch, reduced
+from repro.core.grnnd import GRNNDConfig
+from repro.data import pipeline as PIPE
+from repro.models import transformer as T
+from repro.retrieval import knn_lm
+from repro.serve.engine import ServeEngine
+
+SMOKE_N = 192
+ARCH = "gemma3-1b"
+RUNG = "int8"
+LAM = 0.4
+NLL_EPS = 1e-6  # float tolerance on the fused <= pure gate
+
+_TOKS_RE = re.compile(r"(?:^|\s)tok_s=(\S+)")
+_FNLL_RE = re.compile(r"(?:^|\s)fused_nll=(\S+)")
+_LNLL_RE = re.compile(r"(?:^|\s)lm_nll=(\S+)")
+
+
+def _nll(logits, targets) -> float:
+    lsm = jax.nn.log_softmax(logits, axis=-1)
+    return float(-jnp.take_along_axis(lsm, targets[:, None], axis=-1).mean())
+
+
+def _timed_generate(eng, prompt, new_tokens: int) -> float:
+    """Compile-excluded tokens/sec of one warm `generate` call."""
+    eng.generate(prompt, max_new_tokens=new_tokens)  # compile + warm
+    t0 = time.perf_counter()
+    out = eng.generate(prompt, max_new_tokens=new_tokens)
+    out["tokens"].block_until_ready()
+    dt = time.perf_counter() - t0
+    return out["tokens"].size / dt
+
+
+def run(n: int = 2048, backend: str | None = None,
+        new_tokens: int = 8) -> list[str]:
+    """Build the memorization datastore, then decode through one engine
+    twice — hooks gated OFF for the pure-LM baseline row, ON for the
+    retrieval row — so both rows share every jit cache and the delta is
+    the retrieval work itself."""
+    eff, tag = C.resolve_backend(backend)
+    if eff == "interpret":
+        n = min(n, C.INTERPRET_MAX_N)
+
+    cfg = reduced(get_arch(ARCH))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    # the memorization corpus: every (hidden, next-token) pair both feeds
+    # the datastore and scores the NLL gate — queries AT stored keys
+    seq = 33
+    b = -(-n // (seq - 1))
+    batch = PIPE.batch_for_step(cfg, 0, b, seq)
+    hidden, _ = T.forward(params, cfg, batch, act_dtype=jnp.float32,
+                          remat=False, return_hidden=True)
+    keys = hidden[:, :-1].reshape(-1, cfg.d_model)[:n]
+    vals = batch["tokens"][:, 1:].reshape(-1)[:n]
+
+    with C.backend_scope(backend):
+        ds = knn_lm.DynamicDatastore.build(
+            jax.random.PRNGKey(3), keys, vals, cfg.vocab,
+            build_cfg=GRNNDConfig(s=8, r=16, t1=2, t2=3,
+                                  pairs_per_vertex=16),
+            precision=RUNG, k=8, ef=32)
+    bpv = ds.index.store.bytes_per_vector()
+
+    lm_logits = T.lm_logits(params, cfg, hidden[:, :-1])
+    lm_logits = lm_logits.reshape(-1, cfg.vocab)[:n]
+    lm_nll = _nll(lm_logits, vals)
+    with C.backend_scope(backend):
+        klp = ds.knn_log_probs(keys)
+    fused_nll = _nll(knn_lm.fuse(lm_logits, klp, lam=LAM), vals)
+
+    # one engine, hooks gated by a flag: the lm row and the knn row share
+    # the prefill/decode jit caches, so tok_s deltas isolate retrieval
+    gate = {"on": False}
+    fuse_hook = knn_lm.make_logit_hook(ds, lam=LAM)
+    stream = knn_lm.make_stream_hook(ds, insert_every=4)
+
+    def logit_hook(lm_lo, hid):
+        return fuse_hook(lm_lo, hid) if gate["on"] else lm_lo
+
+    def token_hook(hid, tok):
+        if gate["on"]:
+            stream(hid, tok)
+
+    prompt = {"tokens": batch["tokens"][:2, :8]}
+    eng = ServeEngine(cfg, params, s_max=8 + new_tokens,
+                      act_dtype=jnp.float32,
+                      logit_hook=logit_hook, token_hook=token_hook)
+
+    rows = []
+    tok_s = _timed_generate(eng, prompt, new_tokens)
+    rows.append(C.row(
+        f"fig16/{ARCH}/lm{tag}", 1.0 / tok_s,
+        f"tok_s={tok_s:.1f} lm_nll={lm_nll:.4f} lam=0.0 "
+        f"new_tokens={new_tokens} n={n} backend={eff}",
+        precision="fp32", bytes_per_vector=0.0))
+
+    gate["on"] = True
+    with C.backend_scope(backend):
+        n0 = len(ds)
+        tok_s = _timed_generate(eng, prompt, new_tokens)
+        stream.flush()
+    rows.append(C.row(
+        f"fig16/{ARCH}/knn-{RUNG}{tag}", 1.0 / tok_s,
+        f"tok_s={tok_s:.1f} fused_nll={fused_nll:.4f} "
+        f"lm_nll={lm_nll:.4f} lam={LAM} grew={len(ds) - n0} "
+        f"new_tokens={new_tokens} n={n} backend={eff}",
+        precision=RUNG, bytes_per_vector=bpv))
+    return rows
+
+
+def validate_knn_rows(parsed: list[dict]) -> None:
+    """The fig16 acceptance gate (shared with benchmarks/run.py).
+
+    Raises ValueError unless the family covers both the pure-LM baseline
+    and a retrieval row, every row reports positive decode throughput
+    (`tok_s=`), and every retrieval row's fused NLL beats the pure-LM
+    NLL on the memorization corpus — the end-to-end proof that the
+    decode-time retrieval hook actually retrieves.
+    """
+    fig16 = [p for p in parsed if p["name"].startswith("fig16/")]
+    if not fig16:
+        raise ValueError("no fig16 rows to validate")
+    shapes = set()
+    for p in fig16:
+        toks = _TOKS_RE.search(p["derived"])
+        if not toks or float(toks.group(1)) <= 0.0:
+            raise ValueError(f"fig16 row lacks positive tok_s=: {p!r}")
+        cell = p["name"].split("/")[2]
+        retrieval = cell.startswith("knn-")
+        shapes.add("knn" if retrieval else cell.split("-")[0])
+        if not retrieval:
+            continue
+        fn, ln = _FNLL_RE.search(p["derived"]), _LNLL_RE.search(p["derived"])
+        if not fn or not ln:
+            raise ValueError(
+                f"fig16 retrieval row lacks fused_nll=/lm_nll=: {p!r}")
+        fused, lm = float(fn.group(1)), float(ln.group(1))
+        if not (fused <= lm + NLL_EPS):
+            raise ValueError(
+                f"{p['name']}: fused NLL {fused:.4f} does not beat pure-LM "
+                f"NLL {lm:.4f} on the memorization corpus — the retrieval "
+                "path is not retrieving")
+    if shapes < {"lm", "knn"}:
+        raise ValueError(
+            f"fig16 must cover the lm baseline and a knn-* retrieval row; "
+            f"got {sorted(shapes)}")
+
+
+def smoke() -> None:
+    """Tiny interpret-mode run + in-process contract validation."""
+    from benchmarks.run import parse_row
+
+    rows = run(n=SMOKE_N, backend="interpret")
+    for r in rows:
+        print(r, flush=True)
+    validate_knn_rows([parse_row(r) for r in rows])
+    print("# fig16 smoke: fused-NLL <= pure-LM-NLL gate OK",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "ref", "xla"],
+                    help="kernel backend for datastore build + search")
+    ap.add_argument("--n", type=int, default=2048,
+                    help="datastore pairs (interpret runs are capped at "
+                         f"{C.INTERPRET_MAX_N})")
+    ap.add_argument("--new-tokens", type=int, default=8,
+                    help="decode steps per timed generation")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode run, self-validating "
+                         "(non-zero exit if fused NLL loses to pure LM)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(n=args.n, backend=args.backend,
+                       new_tokens=args.new_tokens):
+            print(row, flush=True)

@@ -25,7 +25,7 @@ import sys
 import time
 
 ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-       "fig13", "fig14", "fig15", "roofline")
+       "fig13", "fig14", "fig15", "fig16", "roofline")
 
 # the artifact contract: bump ONLY with a matching update to every consumer
 # of the perf trajectory (EXPERIMENTS.md §Tables tooling)
@@ -57,7 +57,14 @@ ALL = ("fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
 # validated wherever present, required on every fig15 row by the fig15
 # validator, which also gates zero device-resident rescore bytes and
 # bitwise host/device parity on every host row (ISSUE 9)
-SMOKE_SCHEMA = 7
+# schema 8: kNN-LM decode rows (fig16, retrieval/knn_lm.py +
+# serve/engine.py) carry `tok_s=` (end-to-end generate throughput) and,
+# on retrieval rows, `fused_nll=`/`lm_nll=` (teacher-forced NLL on the
+# memorization corpus) — lifted wherever present as non-negative floats;
+# the fig16 validator REQUIRES the lm baseline + a knn-* retrieval row
+# and gates fused_nll <= lm_nll (the decode-time retrieval hook provably
+# retrieves, ISSUE 10)
+SMOKE_SCHEMA = 8
 SMOKE_N = 192
 _ROW_RE = re.compile(r"^(fig\d+|roofline)/[\w./@+-]+$")
 _PRECISIONS = ("fp32", "bf16", "int8")
@@ -71,9 +78,11 @@ _P99_RE = re.compile(r"(?:^|\s)p99_ms=(\S+)")
 _QPS_RE = re.compile(r"(?:^|\s)qps=(\S+)")
 _TIER_RE = re.compile(r"(?:^|\s)tier=(\S+)")
 _TIERS = ("device", "host")
+_FNLL_RE = re.compile(r"(?:^|\s)fused_nll=(\S+)")
+_LNLL_RE = re.compile(r"(?:^|\s)lm_nll=(\S+)")
 # families the smoke artifact must always cover (one per serving surface)
 SMOKE_FAMILIES = ("fig5", "fig6", "fig10", "fig11", "fig12", "fig13",
-                  "fig14", "fig15", "roofline")
+                  "fig14", "fig15", "fig16", "roofline")
 
 
 def _module(name: str):
@@ -99,6 +108,8 @@ def _module(name: str):
         from benchmarks import fig14_serving as m
     elif name == "fig15":
         from benchmarks import fig15_tiered as m
+    elif name == "fig16":
+        from benchmarks import fig16_knn_lm as m
     elif name == "roofline":
         from benchmarks import roofline as m
     else:
@@ -136,6 +147,11 @@ def parse_row(row: str) -> dict:
     core/vecstore.py HostTier) is lifted; where present it must be
     "device" or "host".  The fig15 validator additionally REQUIRES it on
     every fig15 row and gates the placement + parity contract.
+
+    Schema 8: optional `fused_nll=`/`lm_nll=` (kNN-LM decode rows,
+    retrieval/knn_lm.py) are lifted; where present they must parse as
+    non-negative floats.  The fig16 validator additionally REQUIRES both
+    on every retrieval row and gates fused_nll <= lm_nll.
     """
     parts = row.split(",", 2)
     if len(parts) != 3:
@@ -181,11 +197,19 @@ def parse_row(row: str) -> dict:
         tier_val = tier.group(1)
         if tier_val not in _TIERS:
             raise ValueError(f"tier outside {_TIERS}: {row!r}")
+    nlls = {}
+    for field, rx in (("fused_nll", _FNLL_RE), ("lm_nll", _LNLL_RE)):
+        m = rx.search(derived)
+        nlls[field] = None
+        if m:
+            nlls[field] = float(m.group(1))
+            if nlls[field] < 0:
+                raise ValueError(f"negative {field}: {row!r}")
     return {"name": name, "us_per_call": float(us), "derived": derived,
             "precision": prec.group(1), "bytes_per_vector": bpv_val,
             "selectivity": sel_val,
             "opt_layout": opt.group(1) if opt else None,
-            "corpus_shards": cs_val, "tier": tier_val, **serving}
+            "corpus_shards": cs_val, "tier": tier_val, **serving, **nlls}
 
 
 def validate_rows(parsed: list[dict]) -> None:
@@ -194,7 +218,8 @@ def validate_rows(parsed: list[dict]) -> None:
     must fail, not just one that crashes), no ERROR rows (a crashed
     benchmark must fail CI, not upload a hole), and the per-family
     validators (fig6 layout, fig11 precision ladder, fig12 filtered,
-    fig13 corpus-sharded, fig14 serving, fig15 tiered placement)."""
+    fig13 corpus-sharded, fig14 serving, fig15 tiered placement, fig16
+    kNN-LM decode)."""
     for fam in SMOKE_FAMILIES:
         ok = [p for p in parsed
               if p["name"].startswith(fam + "/")
@@ -211,12 +236,14 @@ def validate_rows(parsed: list[dict]) -> None:
     from benchmarks.fig13_corpus_sharded import validate_corpus_rows
     from benchmarks.fig14_serving import validate_serving_rows
     from benchmarks.fig15_tiered import validate_tiered_rows
+    from benchmarks.fig16_knn_lm import validate_knn_rows
     validate_layout_rows(parsed)
     validate_precision_rows(parsed)
     validate_filtered_rows(parsed)
     validate_corpus_rows(parsed)
     validate_serving_rows(parsed)
     validate_tiered_rows(parsed)
+    validate_knn_rows(parsed)
 
 
 def run_smoke(out_path: str) -> None:
@@ -232,6 +259,7 @@ def run_smoke(out_path: str) -> None:
         ("fig13", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig14", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("fig15", lambda m: m.run(n=SMOKE_N, backend="interpret")),
+        ("fig16", lambda m: m.run(n=SMOKE_N, backend="interpret")),
         ("roofline", lambda m: m.run()),
     )
     for name, call in calls:

@@ -1,60 +1,121 @@
 """kNN-LM: GRNND as the retrieval substrate for a language model.
 
-Trains a tiny LM, builds a GRNND datastore over its hidden states, and
-shows retrieval-fused decoding improving next-token NLL on data that
-repeats datastore content (the classic kNN-LM memorization win).
+The first whole-system scenario on the production stack (DESIGN.md §14):
+trains a tiny LM, indexes its hidden states in a `DynamicDatastore` —
+a `core.dynamic.DynamicIndex` with int8 traversal + fp32 rescore — and
+serves retrieval-fused decoding through `ServeEngine`:
 
-    PYTHONPATH=src python examples/knn_lm.py
+  * every decode step's post-`final_norm` hidden state queries the index
+    through the fused `search_expand` kernels (`logit_hook`);
+  * the generation's own (hidden, sampled-token) pairs stream back INTO
+    the index while it decodes (`token_hook` -> batched insert +
+    localized refinement — the dynamic-index workload, for real);
+  * fused vs pure-LM NLL is compared on data overlapping the datastore
+    (the classic kNN-LM memorization win);
+  * optionally the retrieval rides the continuous-batching AnnEngine
+    (`--engine`: per-step latency percentiles from the same scheduler
+    that serves every other ANN workload) and the fp32 rescore tier can
+    be pinned host-side (`--tier host`).
+
+    PYTHONPATH=src python examples/knn_lm.py [--tier host] [--engine]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.core.grnnd import GRNNDConfig
 from repro.data import pipeline as PIPE
 from repro.models import transformer as T
 from repro.retrieval import knn_lm
+from repro.serve.engine import ServeEngine
 from repro.launch.train import train
 
 
+def nll(log_probs, targets):
+    lsm = jax.nn.log_softmax(log_probs, -1)
+    return float(-jnp.take_along_axis(lsm, targets[:, None], axis=-1).mean())
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--precision", default="int8",
+                    choices=["fp32", "bf16", "int8"],
+                    help="datastore traversal tier (int8/bf16 rescore "
+                         "against fp32)")
+    ap.add_argument("--tier", default="device", choices=["device", "host"],
+                    help="fp32 rescore-tier placement (host needs a "
+                         "quantized traversal tier)")
+    ap.add_argument("--engine", action="store_true",
+                    help="route retrieval through the continuous-batching "
+                         "AnnEngine (reports per-step latency)")
+    ap.add_argument("--steps", type=int, default=40, help="LM train steps")
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--lam", type=float, default=0.4)
+    args = ap.parse_args()
+
     # 1. train a tiny LM briefly
     cfg = reduced(get_arch("gemma3-1b"))
-    state, _ = train("gemma3-1b", steps=40, batch=8, seq=64, lr=3e-3,
+    state, _ = train("gemma3-1b", steps=args.steps, batch=8, seq=64, lr=3e-3,
                      log_every=20)
     params = state.params
 
-    # 2. harvest (hidden state -> next token) pairs into a datastore
+    # 2. harvest (hidden state -> next token) pairs into the DynamicIndex
+    #    datastore; tag each pair with its source document (= sequence) so
+    #    retrieval can be provenance-scoped per query
     batch = PIPE.batch_for_step(cfg, 999, 32, 64)
     hidden, _ = T.forward(params, cfg, batch, act_dtype=jnp.float32,
                           remat=False, return_hidden=True)
     keys_h = hidden[:, :-1].reshape(-1, cfg.d_model)
     vals = batch["tokens"][:, 1:].reshape(-1)
-    store = knn_lm.build_datastore(
-        jax.random.PRNGKey(3), keys_h, vals,
-        GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16))
-    print(f"datastore: {store.keys.shape[0]} entries, "
-          f"graph degree {float((store.graph >= 0).sum(1).mean()):.1f}")
+    n_docs, per_doc = 4, keys_h.shape[0] // 4
+    sources = np.minimum(np.arange(keys_h.shape[0]) // per_doc, n_docs - 1)
+    ds = knn_lm.DynamicDatastore.build(
+        jax.random.PRNGKey(3), keys_h, vals, cfg.vocab,
+        build_cfg=GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16),
+        precision=args.precision, tier=args.tier,
+        sources=sources.astype(np.int32), n_sources=n_docs,
+        k=8, ef=32)
+    engine = ds.attach_engine() if args.engine else None
+    print(f"datastore: {len(ds)} entries, precision={args.precision} "
+          f"tier={args.tier} engine={int(args.engine)}")
 
-    # 3. evaluate fused vs pure-LM NLL on a batch overlapping the datastore
-    test = PIPE.batch_for_step(cfg, 999, 8, 64)  # same distribution/step
-    hid, _ = T.forward(params, cfg, test, act_dtype=jnp.float32,
-                       remat=False, return_hidden=True)
-    q = hid[:, :-1].reshape(-1, cfg.d_model)
-    tgt = test["tokens"][:, 1:].reshape(-1)
+    # 3. retrieval-fused generation: the logit hook queries the index at
+    #    every decode step, the token hook streams the new pairs back in
+    stream = knn_lm.make_stream_hook(ds, insert_every=4)
+    eng = ServeEngine(cfg, params, s_max=64, act_dtype=jnp.float32,
+                      logit_hook=knn_lm.make_logit_hook(ds, lam=args.lam),
+                      token_hook=stream)
+    prompt = {"tokens": batch["tokens"][:4, :16]}
+    n0 = len(ds)
+    out = eng.generate(prompt, max_new_tokens=args.new_tokens)
+    stream.flush()
+    print(f"generated {out['tokens'].shape} fused tokens; datastore grew "
+          f"{n0} -> {len(ds)} during decode")
+    if engine is not None:
+        s = engine.stats()
+        print(f"engine: {s.n_completed} queries, {s.n_mutations} inserted, "
+              f"retrieval p50={s.p50_ms:.1f}ms p99={s.p99_ms:.1f}ms "
+              f"({s.n_buckets} jit buckets)")
 
-    lm_logits = T.lm_logits(params, cfg, hid[:, :-1]).reshape(
-        -1, cfg.vocab)
-    klp = knn_lm.knn_logits(store, q, cfg.vocab, k=8, ef=32)
-    fused = knn_lm.fuse(lm_logits, klp, lam=0.4)
+    # 4. fused vs pure-LM NLL on the memorization corpus itself: queries
+    #    AT stored keys retrieve their own next token, the classic win
+    q = hidden[:8, :-1].reshape(-1, cfg.d_model)
+    tgt = batch["tokens"][:8, 1:].reshape(-1)
+    lm_logits = T.lm_logits(params, cfg, hidden[:8, :-1])
+    lm_logits = lm_logits.reshape(-1, cfg.vocab)
+    klp = ds.knn_log_probs(q)
+    fused = knn_lm.fuse(lm_logits, klp, lam=args.lam)
+    print(f"pure-LM NLL   : {nll(lm_logits, tgt):.4f}")
+    print(f"kNN-fused NLL : {nll(fused, tgt):.4f}  (lam={args.lam})")
 
-    def nll(lp):
-        lsm = jax.nn.log_softmax(lp, -1)
-        return float(-jnp.take_along_axis(
-            lsm, tgt[:, None], axis=-1).mean())
-
-    print(f"pure-LM NLL   : {nll(lm_logits):.4f}")
-    print(f"kNN-fused NLL : {nll(fused):.4f}  (lam=0.4)")
+    # 5. provenance-scoped retrieval: restrict queries to one source doc
+    klp_doc0 = ds.knn_log_probs(q[:64], filter=jnp.zeros((64,), jnp.int32))
+    hit = jnp.isfinite(klp_doc0).any(-1).mean()
+    print(f"doc-0-filtered retrieval: support on {float(hit):.0%} of "
+          f"queries (labels 0..{n_docs - 1} indexed)")
 
 
 if __name__ == "__main__":

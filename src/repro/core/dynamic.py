@@ -281,9 +281,14 @@ class DynamicIndex:
         else:
             vl = np.asarray(vertex_labels, np.int32)
             assert vl.shape == (n,), vl.shape
+            # an empty corpus has no labels to reduce over (the label-
+            # carrying twin of the N=0 quantizer guard): the space must
+            # then come from n_labels explicitly
+            assert n or n_labels is not None, \
+                "empty labeled index needs an explicit n_labels"
             self.n_labels = (n_labels if n_labels is not None
                              else int(vl.max()) + 1)
-            assert vl.max() < self.n_labels, \
+            assert n == 0 or vl.max() < self.n_labels, \
                 f"label {vl.max()} outside the frozen space {self.n_labels}"
             self.vlabels = np.full((cap,), -1, np.int32)
             self.vlabels[:n] = vl

@@ -387,8 +387,16 @@ def make_cache(cfg: ArchConfig, batch_size: int, s_max: int,
 
 
 def prefill(params, cfg: ArchConfig, batch, s_max: int | None = None,
-            act_dtype=jnp.bfloat16, scan_unroll: bool = False):
-    """Process the prompt; returns (last-position logits, cache, length)."""
+            act_dtype=jnp.bfloat16, scan_unroll: bool = False,
+            return_hidden: bool = False):
+    """Process the prompt; returns (last-position logits, cache, length).
+
+    With `return_hidden=True` a fourth element is appended: the
+    post-`final_norm` hidden state of the LAST prompt position, (B, D) —
+    the decode-time retrieval query for the first generated token
+    (retrieval/knn_lm.py).  The default tuple is unchanged, so
+    logits-only callers are untouched.
+    """
     hidden, aux, caches = forward(params, cfg, batch, act_dtype=act_dtype,
                                   return_cache=True, remat=False,
                                   return_hidden=True,
@@ -410,16 +418,25 @@ def prefill(params, cfg: ArchConfig, batch, s_max: int | None = None,
             return c
 
         caches = [[pad_kv(e) for e in seg] for seg in caches]
+    if return_hidden:
+        return logits[:, -1], caches, s, hidden[:, -1]
     return logits[:, -1], caches, s
 
 
 def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
                 batch_extra=None, act_dtype=jnp.bfloat16,
-                scan_unroll: bool = False):
+                scan_unroll: bool = False, return_hidden: bool = False):
     """One decode step for every sequence in the batch.
 
     tokens: (B,) int32 (or (B, ncb) for audio); pos: (B,) current index.
     Returns (logits (B, V) or (B, ncb, V), updated caches).
+
+    With `return_hidden=True` a third element is appended: the
+    post-`final_norm` hidden state (B, D) the logits were read from —
+    the decode-time retrieval query of retrieval/knn_lm.py.  The default
+    two-tuple (and its values) is unchanged: the hidden row is an
+    already-computed intermediate, so logits-only callers stay bitwise
+    identical.
     """
     segments = build_segments(cfg)
     if cfg.modality == "audio_tokens":
@@ -458,4 +475,6 @@ def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(params, cfg, x)
+    if return_hidden:
+        return logits[:, 0], new_caches, x[:, 0]
     return logits[:, 0], new_caches

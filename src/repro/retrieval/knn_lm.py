@@ -1,14 +1,38 @@
-"""kNN-LM: the GRNND index as a first-class serving feature.
+"""kNN-LM: the GRNND index as a first-class serving feature (DESIGN.md §14).
 
 A datastore of (hidden-state, next-token) pairs is indexed with the paper's
-GRNND graph; at decode time the LM's last hidden state queries the graph,
-retrieved neighbors vote on the next token, and the distribution is fused:
+GRNND graph; at decode time the LM's post-`final_norm` hidden state queries
+the graph, retrieved neighbors vote on the next token, and the distribution
+is fused in log space:
 
     p(y) = (1 - lam) * p_LM(y) + lam * softmax_k(-d_k / tau) [y == y_k]
 
-This is the integration point described in DESIGN.md §4.2: the paper's
-contribution (fast graph construction) directly shortens the serving
-pipeline's index-build stage.
+Two datastore shapes:
+
+  * `KNNDatastore` — the frozen array-backed reference: bare (keys, graph)
+    arrays searched via `core.search.search`.  Kept as the parity oracle
+    (tests/test_knn_lm.py pins the production path to it bitwise at fp32).
+  * `DynamicDatastore` — the production path: a `core.dynamic.DynamicIndex`
+    holding the pairs, so the datastore composes every serving subsystem —
+    int8/bf16 traversal + fp32 rescore (`DynamicConfig.precision`, §8),
+    host-cold rescore placement (`tier="host"`, §13), per-document-source
+    filtering (vertex labels, §9), decode-time streaming inserts (the §7
+    dynamic workload, for real), and optionally the continuous-batching
+    `serve.ann_engine.AnnEngine` scheduler (§12) so retrieval latency rides
+    the same queue as every other ANN request.
+
+The kNN vote is a NORMALIZED log-distribution with true ``-inf`` support:
+tokens no retrieved neighbor voted for carry exactly zero probability, so
+`fuse` preserves total mass 1 at any vocab size (the seed's ``log(1e-9)``
+clamp leaked ~``lam * vocab * 1e-9`` of extra mass — invisible at toy
+vocabs, material at real ones).  A query with no retrieval support at all
+(every neighbor slot empty) falls back to the pure LM distribution.
+
+Serving integration: `make_logit_hook` adapts either datastore to
+`ServeEngine(logit_hook=)` — the hook receives ``(lm_logits, hidden)`` per
+decode step — and `make_stream_hook` adapts a `DynamicDatastore` to
+`ServeEngine(token_hook=)`, batching the step's (hidden, sampled-token)
+pairs into the index while the generation is still running.
 """
 from __future__ import annotations
 
@@ -16,8 +40,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import grnnd
+from repro.core import pools as P
+from repro.core.dynamic import DynamicConfig, DynamicIndex
 from repro.core.search import search
 
 
@@ -27,43 +54,280 @@ class KNNDatastore(NamedTuple):
     graph: jnp.ndarray       # (N, R) GRNND adjacency
 
 
+DEFAULT_BUILD_CFG = grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=3,
+                                      pairs_per_vertex=24)
+
+
 def build_datastore(key, hidden_states, next_tokens,
                     cfg: grnnd.GRNNDConfig | None = None) -> KNNDatastore:
-    """Index (hidden, next-token) pairs with a GRNND graph."""
-    cfg = cfg or grnnd.GRNNDConfig(s=12, r=24, t1=3, t2=3,
-                                   pairs_per_vertex=24)
+    """Index (hidden, next-token) pairs with a GRNND graph (array-backed)."""
+    cfg = cfg or DEFAULT_BUILD_CFG
     x = hidden_states.astype(jnp.float32)
     pool = grnnd.build_graph(key, x, cfg)
     return KNNDatastore(keys=x, values=next_tokens.astype(jnp.int32),
                         graph=pool.ids)
 
 
+def vote_log_probs(ids, dists, toks, vocab: int,
+                   tau: float = 10.0) -> jnp.ndarray:
+    """Neighbor vote -> normalized next-token log-distribution.
+
+    ids (Q, k) mark valid neighbor slots (>= 0); dists (Q, k) are their
+    squared distances; toks (Q, k) their stored next-tokens.  Weights are
+    softmax(-d/tau) over the valid slots, scatter-added per token.  The
+    result is a true log-distribution: unvoted tokens are ``-inf`` (NOT a
+    clamp — `fuse` needs exact zeros to preserve mass), voted rows are
+    logsumexp-normalized, and a row with no valid slot at all is all-
+    ``-inf`` (fuse's pure-LM fallback).  Shared by the array-backed and
+    DynamicIndex-backed paths so their outputs are comparable bitwise.
+    """
+    w = jax.nn.softmax(-dists / tau, axis=-1)              # (Q, k)
+    w = jnp.where(ids >= 0, w, 0.0)
+    q = ids.shape[0]
+    probs = jnp.zeros((q, vocab), jnp.float32)
+    probs = probs.at[jnp.arange(q)[:, None], toks].add(w)
+    logp = jnp.where(probs > 0, jnp.log(probs), -jnp.inf)
+    lse = jax.nn.logsumexp(logp, axis=-1, keepdims=True)
+    return jnp.where(jnp.isfinite(lse), logp - lse, -jnp.inf)
+
+
 def knn_logits(store: KNNDatastore, queries: jnp.ndarray, vocab: int,
-               *, k: int = 8, ef: int = 32, tau: float = 10.0) -> jnp.ndarray:
-    """Retrieve k neighbors per query and form a kNN next-token distribution."""
+               *, k: int = 8, ef: int = 32, tau: float = 10.0,
+               **search_kw) -> jnp.ndarray:
+    """Retrieve k neighbors per query and form the kNN log-distribution.
+
+    Extra keywords pass through to `core.search.search` (entry=, valid=,
+    visited=, ...) — the parity tier uses them to pin this reference path
+    to a `DynamicDatastore`'s exact traversal.
+    """
     res = search(store.keys, store.graph, queries.astype(jnp.float32),
-                 k=k, ef=ef)
-    w = jax.nn.softmax(-res.dists / tau, axis=-1)          # (Q, k)
-    w = jnp.where(res.ids >= 0, w, 0.0)
+                 k=k, ef=ef, **search_kw)
     toks = store.values[jnp.clip(res.ids, 0)]              # (Q, k)
-    probs = jnp.zeros((queries.shape[0], vocab), jnp.float32)
-    probs = probs.at[jnp.arange(queries.shape[0])[:, None], toks].add(w)
-    denom = jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
-    return jnp.log(jnp.maximum(probs / denom, 1e-9))
+    return vote_log_probs(res.ids, res.dists, toks, vocab, tau)
 
 
 def fuse(lm_logits: jnp.ndarray, knn_log_probs: jnp.ndarray,
          lam: float = 0.25) -> jnp.ndarray:
-    """Log-space interpolation of LM and kNN distributions."""
+    """Log-space interpolation of LM and kNN distributions.
+
+    `knn_log_probs` must be a normalized log-distribution whose
+    unsupported tokens are exactly ``-inf`` (`vote_log_probs`); then the
+    fused mass is exactly (1-lam) + lam = 1 at ANY vocab size.  Rows with
+    no retrieval support at all (all ``-inf``) fall back to the pure LM
+    distribution instead of silently renormalizing to mass (1-lam).
+    """
     lm_lp = jax.nn.log_softmax(lm_logits, axis=-1)
-    return jnp.logaddexp(lm_lp + jnp.log1p(-lam),
-                         knn_log_probs + jnp.log(lam))
+    fused = jnp.logaddexp(lm_lp + jnp.log1p(-lam),
+                          knn_log_probs + jnp.log(lam))
+    has_support = jnp.isfinite(
+        jax.nn.logsumexp(knn_log_probs, axis=-1, keepdims=True))
+    return jnp.where(has_support, fused, lm_lp)
 
 
-def make_logit_hook(store: KNNDatastore, hidden_fn, vocab: int,
+class DynamicDatastore:
+    """A kNN-LM datastore on the production index stack.
+
+    Wraps a `DynamicIndex` over the (hidden -> next-token) pairs plus the
+    label-indexed token table: the index issues a monotone external label
+    per inserted row (stable across compaction and layout renumbering),
+    so ``values[label]`` is the token lookup and survives any internal
+    slot movement.  `add` streams new pairs in during decode (batched
+    insert -> localized refinement, DESIGN.md §7); `knn_log_probs` routes
+    every query through the fused `search_expand` kernels — int8/bf16
+    traversal with fp32 rescore when `precision` says so, host-cold
+    rescore under `tier="host"`, and per-document-source predicates via
+    `sources=`/`filter=` (§9).
+
+    `attach_engine()` swaps the direct `index.search` call for the
+    continuous-batching `AnnEngine` (§12): queries and the streaming
+    inserts ride the same bounded queue, so retrieval latency is measured
+    (and shaped) by the same scheduler as any other ANN traffic —
+    `engine.stats()` then reports p50/p99 per decode-step retrieval.
+    """
+
+    def __init__(self, index: DynamicIndex, values: np.ndarray,
+                 vocab: int, *, k: int = 8, ef: int = 32, tau: float = 10.0):
+        values = np.asarray(values, np.int32)
+        assert values.shape == (index._next_label,), \
+            "need one stored token per issued label"
+        self.index = index
+        self.vocab = int(vocab)
+        self.k, self.ef, self.tau = int(k), int(ef), float(tau)
+        self._values = values
+        self._engine = None
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def build(cls, key, hidden_states, next_tokens, vocab: int, *,
+              build_cfg: grnnd.GRNNDConfig | None = None,
+              precision: str = "int8", tier: str = "device",
+              sources=None, n_sources: int | None = None,
+              dyn_cfg: DynamicConfig | None = None,
+              **knn_kw) -> "DynamicDatastore":
+        """GRNND-build the initial corpus, then wrap it mutably.
+
+        `sources` tags each pair with an int document-source label in
+        ``[0, n_sources)``; queries can then restrict retrieval to a
+        source subset with ``filter=`` (provenance-scoped retrieval).
+        """
+        x = jnp.asarray(hidden_states, jnp.float32)
+        cfg = build_cfg or DEFAULT_BUILD_CFG
+        dyn = (dyn_cfg or DynamicConfig())._replace(
+            precision=precision, tier=tier)
+        pool = grnnd.build_graph(key, x, cfg)
+        index = DynamicIndex(x, pool, dyn, vertex_labels=sources,
+                             n_labels=n_sources)
+        return cls(index, np.asarray(next_tokens, np.int32), vocab, **knn_kw)
+
+    @classmethod
+    def empty(cls, dim: int, vocab: int, *, r: int = 16,
+              precision: str = "int8", tier: str = "device",
+              n_sources: int | None = None,
+              dyn_cfg: DynamicConfig | None = None,
+              **knn_kw) -> "DynamicDatastore":
+        """A zero-entry datastore that exists purely to be streamed into
+        (the first `add` bootstraps the graph off its own batch)."""
+        dyn = (dyn_cfg or DynamicConfig())._replace(
+            precision=precision, tier=tier)
+        pool = P.Pool(jnp.zeros((0, r), jnp.int32),
+                      jnp.zeros((0, r), jnp.float32))
+        sources = None if n_sources is None else np.zeros((0,), np.int32)
+        index = DynamicIndex(jnp.zeros((0, dim), jnp.float32), pool, dyn,
+                             vertex_labels=sources, n_labels=n_sources)
+        return cls(index, np.zeros((0,), np.int32), vocab, **knn_kw)
+
+    def __len__(self) -> int:
+        return len(self.index)
+
+    # -- serving ----------------------------------------------------------
+
+    def attach_engine(self, cfg=None, **engine_kw):
+        """Route queries and streaming inserts through an `AnnEngine`
+        (continuous batching, admission control, mutation interleave);
+        returns the engine so callers can read `stats()`."""
+        from repro.serve.ann_engine import AnnEngine, DynamicWorker, \
+            EngineConfig
+        if cfg is None:
+            cfg = EngineConfig(ef_menu=(self.ef,),
+                               k_cap=max(16, self.k))
+        self._engine = AnnEngine(DynamicWorker(self.index), cfg, **engine_kw)
+        return self._engine
+
+    def add(self, hidden_states, next_tokens, sources=None) -> np.ndarray:
+        """Insert a batch of (hidden, next-token) pairs; returns labels.
+
+        The decode-time streaming path: batched insert + localized
+        refinement keeps the graph searchable between steps, and tokens
+        written here are retrievable by the SAME generation's later steps
+        (tests/test_knn_lm.py).  With an attached engine the insert rides
+        the mutation queue (drained before returning, so the label/value
+        bookkeeping stays aligned with execution order).
+        """
+        xs = jnp.asarray(hidden_states, jnp.float32)
+        toks = np.asarray(next_tokens, np.int32).reshape(-1)
+        assert xs.shape[0] == toks.shape[0]
+        if self._engine is not None:
+            self._engine.submit_insert(np.asarray(xs), labels=sources)
+            self._engine.run()
+            # labels are issued monotonically at insert EXECUTION; the
+            # drained queue guarantees this batch got the latest block
+            labels = np.arange(self.index._next_label - len(toks),
+                               self.index._next_label, dtype=np.int64)
+        else:
+            labels = self.index.insert(xs, vertex_labels=sources)
+        self._values = np.concatenate([self._values, toks])
+        assert self._values.shape == (self.index._next_label,)
+        return labels
+
+    def _search(self, queries, *, k: int, ef: int, filter=None):
+        if self._engine is None:
+            res = self.index.search(queries, k=k, ef=ef, filter=filter)
+            return res.ids, res.dists
+        fw = (None if filter is None
+              else np.asarray(self.index._query_words(filter)))
+        qn = np.asarray(queries, np.float32)
+        rids = [self._engine.submit(
+            qn[i], k=k, ef=ef,
+            filter_words=None if fw is None else fw[i])
+            for i in range(qn.shape[0])]
+        self._engine.run()
+        done = [self._engine.take_result(r) for r in rids]
+        return (jnp.asarray(np.stack([r.ids for r in done])),
+                jnp.asarray(np.stack([r.dists for r in done])))
+
+    def knn_log_probs(self, queries, *, k: int | None = None,
+                      ef: int | None = None, tau: float | None = None,
+                      filter=None) -> jnp.ndarray:
+        """Retrieve + vote: the production counterpart of `knn_logits`.
+
+        `filter` restricts retrieval to matching document sources
+        (core/labels.py query forms; needs a datastore built with
+        `sources=`).  An empty datastore has no support anywhere — the
+        all-``-inf`` rows make `fuse` serve the pure LM until the first
+        `add` lands.
+        """
+        k = self.k if k is None else k
+        ef = self.ef if ef is None else ef
+        tau = self.tau if tau is None else tau
+        q = jnp.asarray(queries, jnp.float32)
+        if len(self) == 0:
+            return jnp.full((q.shape[0], self.vocab), -jnp.inf, jnp.float32)
+        ids, dists = self._search(q, k=k, ef=ef, filter=filter)
+        toks = jnp.asarray(self._values)[jnp.clip(ids, 0)]
+        return vote_log_probs(ids, dists, toks, self.vocab, tau)
+
+
+def make_logit_hook(store, vocab: int | None = None,
                     lam: float = 0.25, **knn_kw):
-    """Adapter for ServeEngine(logit_hook=...): fuses retrieval into decode."""
+    """Adapter for `ServeEngine(logit_hook=...)`: fuses retrieval into
+    decode.  The hook contract is ``hook(lm_logits, hidden)`` — the engine
+    hands over the post-`final_norm` hidden state it read the logits from,
+    and the hook queries the datastore with it.  `store` is either
+    datastore shape; `vocab` is only needed for the array-backed one.
+    """
+    dynamic = isinstance(store, DynamicDatastore)
+    if not dynamic and vocab is None:
+        raise ValueError("array-backed KNNDatastore needs vocab=")
+
     def hook(lm_logits, hidden):
-        klp = knn_logits(store, hidden, vocab, **knn_kw)
+        q = jnp.asarray(hidden, jnp.float32)
+        if dynamic:
+            klp = store.knn_log_probs(q, **knn_kw)
+        else:
+            klp = knn_logits(store, q, vocab, **knn_kw)
         return fuse(lm_logits, klp, lam)
+    return hook
+
+
+def make_stream_hook(store: DynamicDatastore, *, insert_every: int = 8,
+                     sources_fn=None):
+    """Adapter for `ServeEngine(token_hook=...)`: stream the decode's own
+    (hidden, sampled-token) pairs into the datastore DURING generation.
+
+    Pairs are buffered and inserted every `insert_every` steps — equal-
+    sized batches at a fixed decode batch, so the insert path's jit caches
+    (seed search, staging, localized rounds) stay warm.  `sources_fn(B)`
+    optionally labels each step's rows with a document source.  Call
+    ``hook.flush()`` after `generate` to commit the tail batch.
+    """
+    buf_h: list[np.ndarray] = []
+    buf_t: list[np.ndarray] = []
+
+    def flush():
+        if buf_h:
+            h = np.concatenate(buf_h)
+            t = np.concatenate(buf_t)
+            src = None if sources_fn is None else sources_fn(len(t))
+            store.add(h, t, sources=src)
+            buf_h.clear()
+            buf_t.clear()
+
+    def hook(hidden, tokens):
+        buf_h.append(np.asarray(hidden, np.float32))
+        buf_t.append(np.asarray(tokens, np.int32).reshape(-1))
+        if len(buf_h) >= insert_every:
+            flush()
+
+    hook.flush = flush
     return hook

@@ -1,9 +1,22 @@
 """Batched serving engine: prefill + decode loop with KV/SSM caches.
 
 A deliberately small but real engine: fixed-batch continuous decoding with
-greedy/temperature sampling, per-sequence stop handling, and an optional
-GRNND-backed kNN-LM fusion hook (retrieval/knn_lm.py).  The step functions
-are jit-compiled once per (batch, s_max) bucket.
+greedy/temperature sampling, per-sequence stop handling, and the two hooks
+that make retrieval-in-the-loop (retrieval/knn_lm.py, DESIGN.md §14) a
+first-class serving feature:
+
+  * ``logit_hook(lm_logits, hidden) -> logits`` runs BEFORE sampling each
+    step.  ``hidden`` is the post-`final_norm` hidden state the logits were
+    read from — the decode-time retrieval query.  The two-argument contract
+    is load-bearing: kNN-LM fusion needs the query vector, not just the
+    distribution (tests/test_knn_lm.py locks a real `make_logit_hook`
+    through `generate`).
+  * ``token_hook(hidden, tokens)`` runs AFTER sampling each step with the
+    same hidden state and the tokens it produced — the (key, value) pair a
+    streaming kNN-LM datastore inserts during decode
+    (`knn_lm.make_stream_hook`).
+
+The step functions are jit-compiled once per (batch, s_max) bucket.
 """
 from __future__ import annotations
 
@@ -19,12 +32,14 @@ from repro.models import transformer as T
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, s_max: int,
                  act_dtype=jnp.bfloat16,
-                 logit_hook: Callable | None = None):
+                 logit_hook: Callable | None = None,
+                 token_hook: Callable | None = None):
         self.cfg = cfg
         self.params = params
         self.s_max = s_max
         self.act_dtype = act_dtype
         self.logit_hook = logit_hook
+        self.token_hook = token_hook
 
         self._prefill = jax.jit(self._prefill_impl)
         # donate the caches: decode updates them in place (no per-step copy
@@ -32,15 +47,16 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
 
     def _prefill_impl(self, params, batch):
-        logits, caches, plen = T.prefill(
+        logits, caches, plen, hidden = T.prefill(
             params, self.cfg, batch, s_max=self.s_max,
-            act_dtype=self.act_dtype)
-        return logits, caches, plen
+            act_dtype=self.act_dtype, return_hidden=True)
+        return logits, caches, plen, hidden
 
-    def _decode_impl(self, params, caches, tokens, pos, key):
-        logits, caches = T.decode_step(params, self.cfg, caches, tokens, pos,
-                                       act_dtype=self.act_dtype)
-        return logits, caches
+    def _decode_impl(self, params, caches, tokens, pos):
+        logits, caches, hidden = T.decode_step(
+            params, self.cfg, caches, tokens, pos,
+            act_dtype=self.act_dtype, return_hidden=True)
+        return logits, caches, hidden
 
     @staticmethod
     def _sample(key, logits, temperature: float):
@@ -54,32 +70,44 @@ class ServeEngine:
                  return_hidden: bool = False):
         """Prefill the prompt batch, then decode greedily/sampled.
 
-        Returns dict with tokens (B, max_new_tokens) and per-step logits
-        summaries.
+        Returns a dict with ``tokens`` (B, T) and ``final_pos`` (B,); with
+        ``return_hidden=True`` also ``hidden`` (B, T, D) — per step, the
+        post-`final_norm` state its token was sampled from (``hidden[:, t]``
+        is the retrieval key whose "next token" is ``tokens[:, t]``, the
+        exact pair a kNN-LM datastore stores).
         """
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
-        logits, caches, plen = self._prefill(self.params, batch)
+        logits, caches, plen, hidden = self._prefill(self.params, batch)
         b = logits.shape[0]
         pos = jnp.full((b,), plen, jnp.int32)
         done = jnp.zeros((b,), bool)
 
         outs = []
+        hiddens = []
         for step in range(max_new_tokens):
             key, k_s = jax.random.split(key)
             if self.logit_hook is not None:
-                logits = self.logit_hook(logits)
+                logits = self.logit_hook(logits, hidden)
             tok = self._sample(k_s, logits, temperature)
             if cfg.modality != "audio_tokens" and eos_id is not None:
                 done = done | (tok == eos_id)
                 tok = jnp.where(done, eos_id, tok)
             outs.append(tok)
-            logits, caches = self._decode(self.params, caches, tok, pos, k_s)
+            if return_hidden:
+                hiddens.append(hidden)
+            if self.token_hook is not None:
+                self.token_hook(hidden, tok)
+            logits, caches, hidden = self._decode(self.params, caches, tok,
+                                                  pos)
             pos = pos + 1
             if eos_id is not None and bool(jnp.all(done)):
                 break
 
-        return {
+        out = {
             "tokens": jnp.stack(outs, axis=1),
             "final_pos": pos,
         }
+        if return_hidden:
+            out["hidden"] = jnp.stack(hiddens, axis=1)
+        return out

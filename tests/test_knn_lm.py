@@ -1,0 +1,343 @@
+"""kNN-LM retrieval-in-the-loop suite (DESIGN.md §14).
+
+Locks the production datastore path to the array-backed reference and the
+serving hooks to their contracts:
+
+  * **fp32 parity** — a `DynamicDatastore` (DynamicIndex-backed) and the
+    frozen array-backed `knn_logits` produce BITWISE-equal next-token
+    log-distributions when the traversal is pinned to the same entry and
+    validity view (same graph, same kernels, same vote);
+  * **quantized memorization** — int8 traversal + fp32 rescore keeps the
+    memorization accuracy of fp32 (within 1pt), and the host-cold rescore
+    tier changes nothing bitwise;
+  * **streaming decode** — pairs inserted DURING a generation (the
+    `token_hook` path) are retrievable by later steps of the same
+    generation, from a datastore that started empty;
+  * **hook contracts** — `ServeEngine(logit_hook=)` passes
+    ``(lm_logits, hidden)`` (the seed called it with one argument and
+    crashed on the first decode step: the regression pin runs a real
+    `make_logit_hook` through `generate`), and `return_hidden=True` is
+    honored; the default `prefill`/`decode_step` tuples stay bitwise
+    identical with the hidden-state plumbing in place;
+  * **vote/fuse mass** — the kNN vote is a normalized log-distribution
+    with true ``-inf`` support, so the fused distribution carries total
+    mass exactly 1 at any vocab size, and no-support rows fall back to
+    the pure LM.
+"""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grnnd
+from repro.retrieval import knn_lm
+from repro.retrieval.knn_lm import DynamicDatastore
+
+pytestmark = pytest.mark.kernel_parity
+
+N, DIM, VOCAB = 240, 32, 128
+K, EF = 8, 32
+CFG = grnnd.GRNNDConfig(s=8, r=16, t1=2, t2=3, pairs_per_vertex=16)
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, DIM), jnp.float32)
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (N,), 0, VOCAB), np.int32
+    )
+    return x, toks
+
+
+@pytest.fixture(scope="module")
+def array_store(pairs):
+    x, toks = pairs
+    return knn_lm.build_datastore(jax.random.PRNGKey(2), x, toks, CFG)
+
+
+def _dyn(pairs, **kw):
+    x, toks = pairs
+    return DynamicDatastore.build(
+        jax.random.PRNGKey(2), x, toks, VOCAB, build_cfg=CFG, k=K, ef=EF, **kw
+    )
+
+
+@pytest.fixture(scope="module")
+def fp32_ds(pairs):
+    return _dyn(pairs, precision="fp32")
+
+
+@pytest.fixture(scope="module")
+def int8_ds(pairs):
+    return _dyn(pairs, precision="int8")
+
+
+def _acc(ds_or_klp, x, toks):
+    klp = ds_or_klp if isinstance(ds_or_klp, jnp.ndarray) else None
+    if klp is None:
+        klp = ds_or_klp.knn_log_probs(x)
+    return float((jnp.argmax(klp, axis=-1) == jnp.asarray(toks)).mean())
+
+
+# -- parity ---------------------------------------------------------------
+
+
+def test_fp32_dynamic_matches_array_reference_bitwise(
+    pairs, array_store, fp32_ds
+):
+    """Same graph + same traversal pins -> bitwise-equal vote output."""
+    x, _ = pairs
+    q = x[:64] + 0.05  # near-duplicate queries, off the exact keys
+    got = fp32_ds.knn_log_probs(q)
+    want = knn_lm.knn_logits(
+        array_store,
+        q,
+        VOCAB,
+        k=K,
+        ef=EF,
+        entry=fp32_ds.index.entry(),
+        valid=fp32_ds.index.valid[:N],
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_rescore_keeps_memorization_accuracy(pairs, fp32_ds, int8_ds):
+    """Queries AT stored keys must retrieve their own token: int8
+    traversal + fp32 rescore stays within 1pt of fp32."""
+    x, toks = pairs
+    ref = _acc(fp32_ds, x, toks)
+    assert ref >= 0.9, f"fp32 memorization accuracy only {ref}"
+    assert _acc(int8_ds, x, toks) >= ref - 0.01
+
+
+def test_host_tier_is_bitwise_equal_to_device(pairs, int8_ds):
+    x, _ = pairs
+    host = _dyn(pairs, precision="int8", tier="host")
+    np.testing.assert_array_equal(
+        np.asarray(host.knn_log_probs(x[:32])),
+        np.asarray(int8_ds.knn_log_probs(x[:32])),
+    )
+
+
+def test_engine_routed_search_is_bitwise_equal(pairs):
+    """attach_engine() swaps in the continuous-batching scheduler; the
+    per-query results (and so the vote) must not change."""
+    x, _ = pairs
+    ds = _dyn(pairs, precision="fp32")
+    direct = ds.knn_log_probs(x[:16])
+    ds.attach_engine()
+    try:
+        routed = ds.knn_log_probs(x[:16])
+    finally:
+        ds._engine = None
+    np.testing.assert_array_equal(np.asarray(routed), np.asarray(direct))
+
+
+# -- streaming + filtering ------------------------------------------------
+
+
+def test_streaming_inserts_retrieve_earlier_tokens():
+    """A datastore that starts EMPTY and is fed via the token_hook path
+    must serve retrieval for pairs written earlier in the same run."""
+    ds = DynamicDatastore.empty(DIM, VOCAB, precision="fp32", k=4, ef=32)
+    assert len(ds) == 0
+    empty = ds.knn_log_probs(jnp.zeros((3, DIM)))
+    assert not np.any(np.isfinite(np.asarray(empty)))
+
+    stream = knn_lm.make_stream_hook(ds, insert_every=2)
+    key = jax.random.PRNGKey(5)
+    hs, ts = [], []
+    for step in range(6):
+        key, k1, k2 = jax.random.split(key, 3)
+        h = jax.random.normal(k1, (8, DIM), jnp.float32)
+        t = np.asarray(jax.random.randint(k2, (8,), 0, VOCAB), np.int32)
+        stream(h, t)
+        hs.append(h)
+        ts.append(t)
+    stream.flush()
+    assert len(ds) == 48
+
+    # the FIRST step's pairs, written while the graph was bootstrapping,
+    # are retrievable now
+    klp = ds.knn_log_probs(hs[0])
+    assert _acc(klp, hs[0], ts[0]) >= 0.9
+
+
+def test_source_filtered_retrieval_respects_provenance(pairs):
+    """Disjoint token ranges per source: a filtered query may only ever
+    see tokens from its allowed source."""
+    x, _ = pairs
+    half = N // 2
+    toks = np.concatenate(
+        [
+            np.random.default_rng(0).integers(0, 50, half),
+            np.random.default_rng(1).integers(50, 100, N - half),
+        ]
+    ).astype(np.int32)
+    sources = (np.arange(N) >= half).astype(np.int32)
+    ds = DynamicDatastore.build(
+        jax.random.PRNGKey(2),
+        x,
+        toks,
+        VOCAB,
+        build_cfg=CFG,
+        precision="fp32",
+        sources=sources,
+        n_sources=2,
+        k=K,
+        ef=EF,
+    )
+    q = x[half - 8 : half + 8]  # straddle the source boundary
+    for src, lo, hi in ((0, 0, 50), (1, 50, 100)):
+        klp = ds.knn_log_probs(q, filter=jnp.full((16,), src, jnp.int32))
+        support = np.isfinite(np.asarray(klp))
+        assert support.any(), "filtered search lost all support"
+        voted = np.where(support.any(axis=0))[0]
+        assert voted.min() >= lo and voted.max() < hi
+
+
+def test_empty_labeled_datastore_bootstraps():
+    """DynamicIndex used to crash on a zero-row corpus with vertex
+    labels (vl.max() on an empty array); the streaming-from-empty
+    filtered datastore needs it."""
+    ds = DynamicDatastore.empty(DIM, VOCAB, precision="fp32", n_sources=2)
+    assert len(ds) == 0
+    h = jax.random.normal(jax.random.PRNGKey(6), (16, DIM), jnp.float32)
+    t = np.arange(16, dtype=np.int32)
+    ds.add(h, t, sources=np.repeat(np.arange(2, dtype=np.int32), 8))
+    klp = ds.knn_log_probs(h[:8], filter=jnp.zeros((8,), jnp.int32))
+    voted = np.where(np.isfinite(np.asarray(klp)).any(axis=0))[0]
+    assert voted.max() < 8  # source 0 holds tokens 0..7 only
+
+
+# -- vote / fuse mass -----------------------------------------------------
+
+
+def test_vote_is_normalized_with_true_inf_support():
+    ids = jnp.array([[0, 1, -1], [-1, -1, -1]])
+    dists = jnp.array([[0.1, 0.4, 9.9], [9.9, 9.9, 9.9]])
+    toks = jnp.array([[3, 5, 7], [0, 0, 0]])
+    klp = knn_lm.vote_log_probs(ids, dists, toks, vocab=11)
+    row = np.asarray(klp[0])
+    assert np.isfinite(row[[3, 5]]).all()
+    assert np.all(np.isneginf(np.delete(row, [3, 5])))
+    np.testing.assert_allclose(np.exp(row[[3, 5]]).sum(), 1.0, rtol=1e-6)
+    assert np.all(np.isneginf(np.asarray(klp[1])))  # no valid slot at all
+
+
+def test_fuse_preserves_mass_at_large_vocab():
+    """The seed's log(1e-9) clamp leaked ~lam*vocab*1e-9 of probability
+    mass; with true -inf support the fused mass is exactly 1."""
+    vocab = 50_000
+    lm = jax.random.normal(jax.random.PRNGKey(7), (4, vocab))
+    klp = jnp.full((4, vocab), -jnp.inf).at[:, :3].set(jnp.log(1 / 3))
+    mass = np.exp(np.asarray(jax.nn.logsumexp(knn_lm.fuse(lm, klp, 0.3), -1)))
+    np.testing.assert_allclose(mass, 1.0, rtol=1e-6)
+
+
+def test_fuse_no_support_row_falls_back_to_pure_lm():
+    lm = jax.random.normal(jax.random.PRNGKey(8), (2, 64))
+    klp = jnp.full((2, 64), -jnp.inf).at[0, 5].set(0.0)
+    fused = knn_lm.fuse(lm, klp, 0.5)
+    np.testing.assert_array_equal(
+        np.asarray(fused[1]), np.asarray(jax.nn.log_softmax(lm, -1)[1])
+    )
+    assert np.asarray(fused[0, 5]) > np.asarray(jax.nn.log_softmax(lm, -1))[0, 5]
+
+
+# -- serving hooks (slow: compiles the transformer) -----------------------
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import get_arch, reduced
+    from repro.models import transformer as T
+
+    cfg = reduced(get_arch("gemma3-1b"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab, jnp.int32
+    )
+    return cfg, params, {"tokens": tokens}
+
+
+@pytest.mark.slow
+def test_default_prefill_decode_tuples_unchanged(lm_setup):
+    """The hidden-state plumbing must not perturb logits-only callers:
+    default tuples keep their arity and stay bitwise identical."""
+    from repro.models import transformer as T
+
+    cfg, params, batch = lm_setup
+    out = T.prefill(params, cfg, batch, s_max=16, act_dtype=jnp.float32)
+    out_h = T.prefill(
+        params, cfg, batch, s_max=16, act_dtype=jnp.float32, return_hidden=True
+    )
+    assert len(out) == 3 and len(out_h) == 4
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out_h[0]))
+    assert out_h[3].shape == (2, cfg.d_model)
+
+    tok = jnp.argmax(out[0], -1).astype(jnp.int32)
+    pos = jnp.full((2,), out[2], jnp.int32)
+    dec = T.decode_step(params, cfg, out[1], tok, pos, act_dtype=jnp.float32)
+    dec_h = T.decode_step(
+        params, cfg, out_h[1], tok, pos, act_dtype=jnp.float32,
+        return_hidden=True,
+    )
+    assert len(dec) == 2 and len(dec_h) == 3
+    np.testing.assert_array_equal(np.asarray(dec[0]), np.asarray(dec_h[0]))
+    # the returned hidden IS the state the logits were read from
+    np.testing.assert_array_equal(
+        np.asarray(T.lm_logits(params, cfg, dec_h[2][:, None])[:, 0]),
+        np.asarray(dec_h[0]),
+    )
+
+
+@pytest.mark.slow
+def test_real_logit_hook_runs_inside_generate(lm_setup):
+    """S1 regression: the seed's engine called logit_hook(logits) and
+    crashed with TypeError on the first decode step.  A REAL
+    make_logit_hook (two-arg contract) must run end to end, the stream
+    hook must grow the datastore during decode, and return_hidden=True
+    must be honored (it was silently ignored)."""
+    from repro.serve.engine import ServeEngine
+
+    cfg, params, batch = lm_setup
+    keys = jax.random.normal(
+        jax.random.PRNGKey(3), (N, cfg.d_model), jnp.float32
+    )
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(4), (N,), 0, cfg.vocab), np.int32
+    )
+    ds = DynamicDatastore.build(
+        jax.random.PRNGKey(2), keys, toks, cfg.vocab,
+        build_cfg=CFG, precision="fp32", k=4, ef=32,
+    )
+    calls = []
+    fuse_hook = knn_lm.make_logit_hook(ds, lam=0.3)
+
+    def spy(lm_logits, hidden):
+        calls.append((lm_logits.shape, hidden.shape))
+        return fuse_hook(lm_logits, hidden)
+
+    stream = knn_lm.make_stream_hook(ds, insert_every=2)
+    eng = ServeEngine(
+        cfg, params, s_max=16, act_dtype=jnp.float32,
+        logit_hook=spy, token_hook=stream,
+    )
+    # the dead `key` arg is gone from the decode signature (S3)
+    assert "key" not in inspect.signature(eng._decode_impl).parameters
+
+    n0 = len(ds)
+    out = eng.generate(batch, max_new_tokens=4, return_hidden=True)
+    stream.flush()
+    assert out["tokens"].shape == (2, 4)
+    assert out["hidden"].shape == (2, 4, cfg.d_model)
+    assert calls == [((2, cfg.vocab), (2, cfg.d_model))] * 4
+    assert len(ds) == n0 + 8  # 4 steps x batch 2 streamed in
+    # hidden[:, t] is the state tokens[:, t] was sampled from: re-fusing
+    # outside the engine reproduces the greedy choice
+    klp = ds.knn_log_probs(out["hidden"][:, 0])
+    assert klp.shape == (2, cfg.vocab)

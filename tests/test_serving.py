@@ -180,12 +180,18 @@ class TestKnnLM:
         assert acc > 0.9, acc
 
     def test_fuse_is_valid_distribution(self):
-        lm = jax.random.normal(jax.random.PRNGKey(4), (5, 30))
-        knn = jax.nn.log_softmax(
-            jax.random.normal(jax.random.PRNGKey(5), (5, 30)))
+        """Mass exactly 1 at a REAL vocab size, with sparse -inf support
+        rows — the seed's log(1e-9) clamp leaked ~lam*vocab*1e-9 of mass,
+        invisible at vocab 30 and material at 50k (DESIGN.md §14)."""
+        vocab = 50_000
+        lm = jax.random.normal(jax.random.PRNGKey(4), (5, vocab))
+        # realistic vote: a handful of supported tokens, all else -inf
+        knn = jnp.full((5, vocab), -jnp.inf)
+        knn = knn.at[:, :7].set(jax.nn.log_softmax(
+            jax.random.normal(jax.random.PRNGKey(5), (5, 7))))
         fused = knn_lm.fuse(lm, knn, lam=0.3)
         total = jnp.exp(jax.nn.logsumexp(fused, axis=-1))
-        np.testing.assert_allclose(total, np.ones(5), rtol=1e-5)
+        np.testing.assert_allclose(total, np.ones(5), rtol=1e-6)
 
     def test_lam_zero_is_pure_lm(self):
         lm = jax.random.normal(jax.random.PRNGKey(6), (3, 20))
